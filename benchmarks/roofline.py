@@ -1,0 +1,162 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+cost_analysis() on the SPMD-partitioned executable reports PER-CHIP figures
+(verified against analytic parameter/argument sizes in EXPERIMENTS.md
+§Dry-run).  Collective result bytes are converted to wire bytes with the
+standard ring factors; the group size n is approximated by the mesh axis the
+collective most plausibly runs over (model=16) -- noted as approximate.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+DEFAULT_GROUP = 16  # model-axis size; collectives are predominantly TP
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def wire_bytes(collectives: dict, n: int = DEFAULT_GROUP) -> float:
+    """Convert result bytes to per-chip wire bytes (ring algorithms)."""
+    total = 0.0
+    for kind, rec in collectives.items():
+        b = rec["bytes"]
+        if kind == "all-reduce":
+            total += 2.0 * b * (n - 1) / n
+        elif kind == "all-gather":
+            total += b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            total += b * (n - 1)          # result is the scattered shard
+        elif kind == "all-to-all":
+            total += b * (n - 1) / n
+        elif kind == "collective-permute":
+            total += b
+    return total
+
+
+def model_flops(rec: dict) -> float:
+    """MODEL_FLOPS (global): 6·N_active·D train, 2·N_active·D forward-only."""
+    cfg = get_config(rec["arch"], rec["shape"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = wire_bytes(rec.get("collectives", {})) / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec["flops"] * chips
+    return {
+        **rec,
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+    }
+
+
+_SUGGEST = {
+    "compute": ("reduce recompute (remat policy) / ensure matmul dims are "
+                "128-aligned so padded-head waste stops burning MXU cycles"),
+    "memory": ("cut activation traffic: chunk the LM head, fuse the STC "
+               "residual chain (Pallas kernel), bf16 the gradient tree"),
+    "collective": ("overlap the message psum with backward, shrink gathered "
+                   "tensors (reduce-scatter the server stage), or move expert "
+                   "weights to an all_to_all expert-parallel layout"),
+}
+
+
+def suggestion(a: dict) -> str:
+    return _SUGGEST[a["dominant"]]
+
+
+def load_records(variant: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(os.path.abspath(ART), "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if variant is None and r.get("variant"):
+            continue
+        if variant is not None and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(recs) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        a = analyze(r)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} "
+            f"| {a['t_collective_s']:.3e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    variant = args[0] if args else None
+    recs = load_records(variant)
+    if not recs:
+        print("no dry-run artifacts found -- run repro.launch.dryrun first")
+        return
+    print(table(recs))
+    print()
+    for r in recs:
+        a = analyze(r)
+        print(f"{a['arch']} x {a['shape']} x {a['mesh']}: dominant="
+              f"{a['dominant']} -> {suggestion(a)}")
+    if "--write" in sys.argv:
+        out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "roofline_table.md")
+        with open(os.path.abspath(out), "w") as f:
+            f.write("# Roofline baseline table (single-pod 16x16 + "
+                    "multi-pod 2x16x16)\n\n")
+            f.write(table(recs))
+            f.write("\n\n## Per-pair bottleneck notes\n\n")
+            for r in recs:
+                a = analyze(r)
+                f.write(f"* **{a['arch']} × {a['shape']} × {a['mesh']}** — "
+                        f"dominant {a['dominant']}: {suggestion(a)}\n")
+        print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

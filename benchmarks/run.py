@@ -1,0 +1,52 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [names...]
+
+Prints ``name,value,derived`` CSV rows.  The fed benchmarks are scaled-down
+(CPU) versions of the paper's experiments on synthetic structured data; the
+``roofline`` benchmark reads the dry-run artifacts if present.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    quick = "--quick" in sys.argv
+
+    from benchmarks import kernel_bench, paper_claims
+
+    rows = []
+    which = args or ["golomb", "kernels", "fig3", "fig5", "fig2", "table4",
+                     "fig8", "roofline"]
+    if quick:
+        which = args or ["golomb", "kernels", "fig3"]
+
+    for name in which:
+        print(f"# === {name} ===", flush=True)
+        if name == "kernels":
+            rows += kernel_bench.run(verbose=False)
+        elif name == "roofline":
+            from benchmarks import roofline
+            recs = roofline.load_records()
+            if not recs:
+                print("# (no dry-run artifacts; skipping roofline rows)")
+                continue
+            for r in recs:
+                a = roofline.analyze(r)
+                rows.append((f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+                             max(a["t_compute_s"], a["t_memory_s"],
+                                 a["t_collective_s"]),
+                             f"dominant={a['dominant']}"))
+        else:
+            rows += paper_claims.BENCHES[name](verbose=False)
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

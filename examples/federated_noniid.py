@@ -1,0 +1,62 @@
+"""The paper's headline experiment, miniaturized: STC vs FedAvg vs signSGD on
+non-iid federated data (every client holds TWO classes), CNN on a synthetic
+CIFAR-shaped task.
+
+    PYTHONPATH=src python examples/federated_noniid.py [--rounds 40]
+"""
+
+import argparse
+import time
+
+from repro.core import make_protocol
+from repro.data import make_image_classification
+from repro.fed import FedEnvironment, FederatedTrainer, TrainerConfig
+from repro.models.paper_models import MODEL_ZOO
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--model", default="cnn", choices=("cnn", "mlp", "logreg",
+                                                       "lstm"))
+    ap.add_argument("--classes-per-client", type=int, default=2)
+    args = ap.parse_args()
+
+    if args.model == "lstm":
+        from repro.data import make_sequence_classification
+        train, test = make_sequence_classification(seed=0, n=6000)
+    elif args.model == "cnn":
+        train, test = make_image_classification(seed=0, n=6000)
+    else:
+        from repro.data import make_classification
+        train, test = make_classification(seed=0, n=6000)
+
+    env = FedEnvironment(n_clients=10, participation=1.0,
+                         classes_per_client=args.classes_per_client,
+                         batch_size=20)
+    print(f"model={args.model}  clients=10/10  "
+          f"classes/client={args.classes_per_client}")
+    print(f"{'method':>10s} {'acc':>6s} {'upMB':>9s} {'downMB':>9s} "
+          f"{'iters':>6s} {'time':>5s}")
+
+    for pname, kw, rounds in [
+        ("stc", dict(sparsity_up=1 / 50, sparsity_down=1 / 50), args.rounds),
+        ("fedavg", dict(local_iters=10), max(args.rounds // 10, 1)),
+        ("signsgd", dict(), args.rounds),
+        ("baseline", dict(), args.rounds),
+    ]:
+        t0 = time.time()
+        proto = make_protocol(pname, **kw)
+        tr = FederatedTrainer(MODEL_ZOO[args.model], train, test, env, proto,
+                              TrainerConfig(lr=0.05))
+        h = tr.run(rounds, eval_every=rounds)[-1]
+        print(f"{pname:>10s} {h['acc']:6.3f} {h['bits_up']/8e6:9.2f} "
+              f"{h['bits_down']/8e6:9.2f} {h['iterations']:6d} "
+              f"{time.time()-t0:4.0f}s")
+
+    print("\nexpected (paper): STC matches/beats the others at a fraction "
+          "of the bits; signSGD degrades hardest under non-iid.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Parallel dry-run sweep driver: one subprocess per (arch, shape, mesh),
+N workers, cheap shapes first. Skips combos whose artifact already exists.
+
+    python scripts/sweep.py [--workers 7] [--meshes single multi]
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCHS = ["smollm-135m", "qwen2-0.5b", "mamba2-370m", "granite-moe-3b-a800m",
+         "internvl2-2b", "recurrentgemma-2b", "whisper-medium",
+         "deepseek-v2-lite-16b", "moonshot-v1-16b-a3b", "phi3-medium-14b"]
+SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def run_one(job):
+    arch, shape, multi = job
+    mesh = "2x16x16" if multi else "16x16"
+    out = os.path.join(REPO, "artifacts", "dryrun",
+                       f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(out):
+        return f"SKIP {arch} {shape} {mesh}"
+    cmd = [sys.executable, "-u", "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if multi:
+        cmd.append("--multi-pod")
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    t0 = time.time()
+    r = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                       text=True, timeout=7200)
+    dt = time.time() - t0
+    if r.returncode == 0 and os.path.exists(out):
+        return f"OK   {arch} {shape} {mesh} ({dt:.0f}s)"
+    tail = (r.stdout + r.stderr)[-1200:].replace("\n", " | ")
+    return f"FAIL {arch} {shape} {mesh} ({dt:.0f}s): {tail}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=7)
+    ap.add_argument("--meshes", nargs="+", default=["single", "multi"])
+    args = ap.parse_args()
+
+    jobs = []
+    for shape in SHAPES:                       # cheap shapes first
+        for arch in ARCHS:                     # small archs first
+            for m in args.meshes:
+                jobs.append((arch, shape, m == "multi"))
+
+    log = os.path.join(REPO, "artifacts", "sweep_parallel.log")
+    done = 0
+    with open(log, "a") as f, ThreadPoolExecutor(args.workers) as ex:
+        f.write(f"\n==== sweep start: {len(jobs)} jobs ====\n")
+        f.flush()
+        for res in ex.map(run_one, jobs):
+            done += 1
+            f.write(f"[{done}/{len(jobs)}] {res}\n")
+            f.flush()
+        f.write("SWEEP DONE\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Checkpointing: msgpack-serialized pytrees (no orbax in this container).
+
+    save_checkpoint(path, {"params": ..., "step": ...})
+    tree = restore_checkpoint(path, like=template_tree)
+
+Arrays are stored as (dtype, shape, raw bytes); bfloat16 round-trips via a
+uint16 view.  The federated trainer and the distributed train_step state are
+both plain pytrees, so one pair of functions covers the whole framework.
+"""
+
+from .msgpack_ckpt import restore_checkpoint, save_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,68 @@
+"""Msgpack pytree checkpointing with zstd compression."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]
+
+_BF16 = "bfloat16"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return {"d": _BF16, "s": list(arr.shape),
+                "b": arr.view(np.uint16).tobytes()}
+    return {"d": str(arr.dtype), "s": list(arr.shape), "b": arr.tobytes()}
+
+
+def _unpack_leaf(rec):
+    if rec["d"] == _BF16:
+        arr = np.frombuffer(rec["b"], np.uint16).reshape(rec["s"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    arr = np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(rec["s"])
+    return jnp.asarray(arr)
+
+
+def save_checkpoint(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = msgpack.packb({
+        "treedef": str(treedef),  # structural fingerprint for validation
+        "leaves": [_pack_leaf(x) for x in leaves],
+    })
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(comp)
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (validates leaf count +
+    treedef fingerprint)."""
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    obj = msgpack.unpackb(payload)
+    leaves, treedef = jax.tree.flatten(like)
+    if len(obj["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(obj['leaves'])} leaves, template has "
+            f"{len(leaves)}")
+    if obj["treedef"] != str(treedef):
+        raise ValueError("checkpoint tree structure mismatch")
+    return jax.tree.unflatten(treedef, [_unpack_leaf(r)
+                                        for r in obj["leaves"]])

@@ -1,0 +1,8 @@
+"""Selectable architecture configs (``--arch <id>``) + input shapes."""
+
+from .registry import (ARCH_IDS, INPUT_SHAPES, get_config, get_smoke_config,
+                       input_specs)
+from .shapes import InputShape
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "get_config", "get_smoke_config",
+           "input_specs", "InputShape"]

@@ -1,0 +1,92 @@
+"""Architecture registry: ``--arch <id>`` resolution + ShapeDtypeStruct
+input specs per (architecture, input shape).
+
+``long_500k`` resolves each arch's LONG_CONFIG (sliding-window variant for
+full-attention archs; identity for SSM/hybrid). Coverage decisions are
+documented in DESIGN.md §Decode-shape coverage.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+from .shapes import INPUT_SHAPES, InputShape
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "input_specs",
+           "INPUT_SHAPES"]
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "smollm-135m": "smollm_135m",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "whisper-medium": "whisper_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-370m": "mamba2_370m",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "internvl2-2b": "internvl2_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; options: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, shape: str | InputShape | None = None) -> ModelConfig:
+    """Full config; resolves the LONG_CONFIG variant for long_500k."""
+    mod = _module(arch)
+    if shape is not None:
+        name = shape if isinstance(shape, str) else shape.name
+        if name == "long_500k":
+            return mod.LONG_CONFIG
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens + labels (B, S) int32  [+ frames / prefix embeddings]
+    prefill: tokens (B, S)                 [+ frames / prefix embeddings]
+    decode:  token (B, 1)                  [+ encoder memory for enc-dec]
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16
+
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a seq_len cache
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+
+    if cfg.encoder is not None:
+        if shape.kind == "decode":
+            # decoder attends to the precomputed encoder memory
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.n_frames, cfg.d_model), f32)
+        else:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.n_frames, cfg.d_model), f32)
+    if cfg.n_prefix_tokens and shape.kind != "decode":
+        specs["prefix"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_tokens, cfg.d_model), f32)
+    return specs

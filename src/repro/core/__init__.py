@@ -1,0 +1,44 @@
+"""Core contribution of the paper: Sparse Ternary Compression (STC).
+
+Public API:
+    compression  -- top-k / ternarize / STC / signSGD operators (jit-able)
+    residual     -- error-feedback residual accumulation (Eqs. 9/11/12)
+    golomb       -- Eq. 15-17 entropy models + real Golomb bitstream codec
+    protocols    -- Protocol objects: baseline / fedavg / signsgd / topk / stc
+    caching      -- server partial-sum cache P^(s) for partial participation
+"""
+
+from .compression import (
+    CompressionStats,
+    flatten_pytree,
+    majority_vote_sign,
+    sign_compress,
+    stc_compress,
+    stc_compress_pytree,
+    ternarize,
+    top_k_mask,
+    top_k_sparsify,
+    unflatten_pytree,
+)
+from .golomb import (
+    decode_ternary,
+    encode_ternary,
+    entropy_sparse,
+    entropy_sparse_ternary,
+    golomb_b_star,
+    golomb_position_bits,
+    stc_message_bits,
+)
+from .protocols import PROTOCOLS, Protocol, make_protocol
+from .residual import ResidualState, compress_with_feedback, init_residual
+from .caching import UpdateCache
+
+__all__ = [
+    "CompressionStats", "flatten_pytree", "majority_vote_sign", "sign_compress",
+    "stc_compress", "stc_compress_pytree", "ternarize", "top_k_mask",
+    "top_k_sparsify", "unflatten_pytree", "decode_ternary", "encode_ternary",
+    "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",
+    "golomb_position_bits", "stc_message_bits", "PROTOCOLS", "Protocol",
+    "make_protocol", "ResidualState", "compress_with_feedback", "init_residual",
+    "UpdateCache",
+]

@@ -1,0 +1,53 @@
+"""Server-side partial-sum cache for partial client participation (Sec. V-B).
+
+The server keeps the last ``τ`` compressed global updates
+``{ΔW~^(T-1), ..., ΔW~^(T-τ)}`` and their partial sums
+``P^(s) = Σ_{t=1..s} ΔW~^(T-t)``.  A client that skipped ``s`` rounds
+downloads ``P^(s)`` (one message) instead of replaying ``s`` updates; a client
+that skipped more than ``τ`` rounds downloads the full model ``W^(T)``.
+
+Entropy bound (Eq. 13): H(P^(τ)) <= τ·H(ΔW~), i.e. download size grows at most
+linearly in the number of skipped rounds -- we account bits accordingly.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, Optional
+
+import numpy as np
+
+__all__ = ["UpdateCache"]
+
+
+class UpdateCache:
+    """Host-side ring buffer of global updates + lazily materialized partials."""
+
+    def __init__(self, numel: int, max_rounds: int = 32) -> None:
+        self.numel = numel
+        self.max_rounds = max_rounds
+        self._updates: Deque[np.ndarray] = collections.deque(maxlen=max_rounds)
+        self.round = 0
+
+    def push(self, update: np.ndarray) -> None:
+        self._updates.appendleft(np.asarray(update, dtype=np.float32).reshape(-1))
+        self.round += 1
+
+    def partial_sum(self, skipped: int) -> Optional[np.ndarray]:
+        """P^(s): the sum of the last ``skipped`` updates, or None if too stale."""
+        if skipped == 0:
+            return np.zeros(self.numel, dtype=np.float32)
+        if skipped > len(self._updates):
+            return None  # caller must download the full model
+        out = np.zeros(self.numel, dtype=np.float32)
+        for t in range(skipped):
+            out += self._updates[t]
+        return out
+
+    def sync_bits(self, skipped: int, bits_per_update: float, model_bits: float) -> float:
+        """Download cost for a client that skipped ``skipped`` rounds (Eq. 13)."""
+        if skipped > len(self._updates):
+            return model_bits
+        # The partial sum of s sparse updates has at most s-times the nnz;
+        # H(P^(s)) <= s * H(ΔW~) is attained in the worst case (disjoint masks).
+        return max(1, skipped) * bits_per_update

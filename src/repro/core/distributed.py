@@ -1,0 +1,116 @@
+"""Tree-level STC for the distributed train_step (no flatten, no gathers).
+
+Global top-k over the whole model == per-leaf masking with ONE global
+magnitude threshold, and µ == the global mean magnitude of kept entries.
+Computing the threshold by bisection over per-leaf counts therefore gives a
+result *identical* to flattening-and-sorting, but touches every leaf in place:
+no concatenation, no resharding, no all-gather of the parameter vector.
+Reductions over the tensor-parallel ("model") axis happen automatically via
+GSPMD (jnp.sum of a sharded leaf is a global sum); reductions over manual
+(shard_map) axes are explicit via ``lax.psum`` when ``manual_axes`` is given.
+
+This module is the distributed twin of core.compression / kernels.ops, and is
+oracle-checked against them in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TreeStats", "tree_numel", "stc_compress_tree",
+           "sign_compress_tree", "tree_add", "tree_scale"]
+
+
+class TreeStats(NamedTuple):
+    nnz: jnp.ndarray
+    numel: int
+    mu: jnp.ndarray
+    thresh: jnp.ndarray
+
+
+def tree_numel(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def _psum(x, manual_axes):
+    return jax.lax.psum(x, manual_axes) if manual_axes else x
+
+
+def _pmax(x, manual_axes):
+    return jax.lax.pmax(x, manual_axes) if manual_axes else x
+
+
+def _count_and_sum(tree, t):
+    """(#|x|>=t, Σ|x| over that set) across all leaves."""
+    cnt = jnp.zeros((), jnp.int32)
+    s = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        a = jnp.abs(leaf.astype(jnp.float32))
+        m = a >= t
+        cnt = cnt + jnp.sum(m.astype(jnp.int32))
+        s = s + jnp.sum(jnp.where(m, a, 0.0))
+    return cnt, s
+
+
+def stc_compress_tree(tree, p: float, *, manual_axes=(), iters: int = 32,
+                      numel: int | None = None):
+    """STC over a pytree: returns (ternary_tree, stats).
+
+    ``manual_axes``: shard_map axis names the leaves are *sharded over* (the
+    server stage when state is scattered); () when each caller holds the full
+    (possibly GSPMD-sharded) tree.
+    """
+    numel = numel if numel is not None else tree_numel(tree)
+    if manual_axes:
+        # numel above counts only the local shard -- scale by the axis size
+        # is wrong for uneven shards; callers pass explicit numel instead.
+        pass
+    k = max(int(numel * p), 1)
+
+    a_max = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        a_max = jnp.maximum(a_max, jnp.max(jnp.abs(leaf.astype(jnp.float32))))
+    a_max = _pmax(a_max, manual_axes)
+
+    hi0 = a_max * jnp.float32(1.0 + 1e-6) + jnp.float32(1e-30)
+    lo0 = jnp.float32(0.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt, _ = _count_and_sum(tree, mid)
+        cnt = _psum(cnt, manual_axes)
+        keep = cnt >= k
+        return jnp.where(keep, mid, lo), jnp.where(keep, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    cnt, s = _count_and_sum(tree, lo)
+    cnt = _psum(cnt, manual_axes)
+    s = _psum(s, manual_axes)
+    mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+    def tern_leaf(x):
+        xf = x.astype(jnp.float32)
+        m = jnp.abs(xf) >= lo
+        return jnp.where(m, mu * jnp.sign(xf), 0.0).astype(x.dtype)
+
+    tern = jax.tree.map(tern_leaf, tree)
+    return tern, TreeStats(nnz=cnt, numel=numel, mu=mu, thresh=lo)
+
+
+def sign_compress_tree(tree, step: float):
+    return jax.tree.map(
+        lambda x: (step * jnp.sign(x.astype(jnp.float32))).astype(x.dtype),
+        tree)

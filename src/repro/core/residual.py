@@ -1,0 +1,50 @@
+"""Error-feedback residual accumulation (paper Eqs. 9, 11, 12).
+
+Both clients and the server keep a residual ``A`` holding the part of the
+update that compression dropped:
+
+    client:  A_i <- A_i + ΔW_i - STC(ΔW_i + A_i)        (Eq. 11)
+    server:  A   <- A   + ΔW   - STC(ΔW   + A)          (Eq. 12)
+
+The residual MUST be kept in fp32 even for bf16 models: the dropped mass per
+round is tiny and would underflow bf16's 8-bit mantissa, silently breaking the
+telescoping-sum property that makes error feedback converge.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .compression import CompressionStats
+
+__all__ = ["ResidualState", "init_residual", "compress_with_feedback"]
+
+
+class ResidualState(NamedTuple):
+    """fp32 residual, same structure as the update pytree (or a flat vector)."""
+
+    residual: object  # pytree or array
+
+
+def init_residual(like) -> ResidualState:
+    res = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), like)
+    return ResidualState(residual=res)
+
+
+def compress_with_feedback(
+    update,
+    state: ResidualState,
+    compress_fn: Callable[[jnp.ndarray], tuple[jnp.ndarray, CompressionStats]],
+):
+    """One error-feedback step over an *array* update (flat-vector form).
+
+    ``compressed, new_state, stats = compress_with_feedback(ΔW, A, stc)``
+    implements:  ΔW~ = C(ΔW + A);  A' = (ΔW + A) - ΔW~.
+    """
+    carried = update.astype(jnp.float32) + state.residual
+    compressed, stats = compress_fn(carried)
+    new_res = carried - compressed.astype(jnp.float32)
+    return compressed, ResidualState(residual=new_res), stats

@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic datasets + federated splitting + batching."""
+
+from .synthetic import (Dataset, make_classification,
+                        make_image_classification, make_lm_tokens,
+                        make_sequence_classification)
+
+__all__ = ["Dataset", "make_classification", "make_image_classification",
+           "make_lm_tokens", "make_sequence_classification"]

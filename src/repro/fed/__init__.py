@@ -1,0 +1,7 @@
+"""Federated runtime: environment (Alg. 5 splits), trainer (Alg. 2 loop)."""
+
+from .environment import FedEnvironment, split_data, volume_fractions
+from .loop import FederatedTrainer, TrainerConfig
+
+__all__ = ["FedEnvironment", "split_data", "volume_fractions",
+           "FederatedTrainer", "TrainerConfig"]

@@ -1,0 +1,222 @@
+"""Federated training loop -- Algorithm 2 of the paper, end to end.
+
+The round computation (local SGD on every participating client, upstream
+compression with error feedback, server aggregation, downstream compression,
+global apply) is ONE jit'd function, vmapped over the participating clients.
+Partial participation, the server-side update cache (Sec. V-B) and the bit
+ledger (Eq. 1) live in the host driver.
+
+Works with any model from ``repro.models.paper_models`` (or any
+(init_fn, apply_fn) pair with ``apply(params, x) -> logits``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import golomb
+from repro.core.caching import UpdateCache
+from repro.core.compression import (flatten_pytree, majority_vote_sign,
+                                    sign_compress, stc_compress,
+                                    top_k_sparsify, unflatten_pytree)
+from repro.core.protocols import Protocol
+from repro.data.synthetic import Dataset
+from repro.fed.environment import FedEnvironment, split_data
+
+__all__ = ["FederatedTrainer", "TrainerConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    lr: float = 0.04
+    momentum: float = 0.0
+    seed: int = 0
+    eval_batch: int = 512
+
+
+def _cross_entropy(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+class FederatedTrainer:
+    """Simulates Algorithm 2 on one host."""
+
+    def __init__(self, model: tuple[Callable, Callable], train: Dataset,
+                 test: Dataset, env: FedEnvironment, protocol: Protocol,
+                 tcfg: TrainerConfig = TrainerConfig()):
+        self.apply_fn = model[1]
+        self.env = env
+        self.protocol = protocol
+        self.tcfg = tcfg
+        self.train = train
+        self.test = test
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = model[0](key)
+        vec, self.spec = flatten_pytree(params)
+        self.params_vec = vec
+        self.numel = int(vec.size)
+
+        self.splits = split_data(train.y, env, seed=tcfg.seed)
+        self.rng = np.random.default_rng(tcfg.seed + 1)
+
+        # stacked per-client optimizer/compressor state (fp32)
+        c = env.n_clients
+        self.client_mom = jnp.zeros((c, self.numel), jnp.float32)
+        self.client_res = jnp.zeros((c, self.numel), jnp.float32)
+        self.server_res = jnp.zeros((self.numel,), jnp.float32)
+        self.last_seen = np.zeros(c, dtype=np.int64)  # round of last participation
+        self.cache = UpdateCache(self.numel, max_rounds=64)
+
+        self.round = 0
+        self.bits_up = 0.0
+        self.bits_down = 0.0
+        self.history: list[dict] = []
+
+        self._round_fn = self._build_round_fn()
+        self._eval_fn = jax.jit(self._eval_batch)
+
+    # ------------------------------------------------------------------ jit
+    def _build_round_fn(self):
+        proto = self.protocol
+        lr = self.tcfg.lr
+        mom = self.tcfg.momentum
+        spec = self.spec
+        apply_fn = self.apply_fn
+
+        def local_update(params_vec, mom_vec, xs, ys):
+            """One client: ``local_iters`` SGD steps. xs: (n, b, ...)."""
+            params = unflatten_pytree(params_vec, spec)
+
+            def loss(p, x, y):
+                return _cross_entropy(apply_fn(p, x), y)
+
+            def step(carry, batch):
+                p, v = carry
+                x, y = batch
+                g = jax.grad(loss)(p, x, y)
+                gv, _ = flatten_pytree(g)
+                v = mom * v + gv
+                p = unflatten_pytree(flatten_pytree(p)[0] - lr * v, spec)
+                return (p, v), None
+
+            (p_final, v_final), _ = jax.lax.scan(step, (params, mom_vec),
+                                                 (xs, ys))
+            delta = flatten_pytree(p_final)[0] - params_vec
+            return delta, v_final
+
+        def client_compress(delta, res):
+            if proto.name in ("baseline", "fedavg"):
+                return delta, res
+            if proto.name == "signsgd":
+                msg, _ = sign_compress(delta, proto.sign_step)
+                return msg, res
+            carried = delta + res
+            if proto.name == "topk":
+                msg, _ = top_k_sparsify(carried, proto.sparsity_up)
+            else:
+                msg, _ = stc_compress(carried, proto.sparsity_up)
+            return msg, carried - msg
+
+        def round_fn(params_vec, server_res, mom_sel, res_sel, xs, ys):
+            """xs: (P, iters, b, ...); ys: (P, iters, b)."""
+            deltas, new_mom = jax.vmap(
+                lambda m, x, y: local_update(params_vec, m, x, y)
+            )(mom_sel, xs, ys)
+            msgs, new_res = jax.vmap(client_compress)(deltas, res_sel)
+
+            if proto.name == "signsgd":
+                global_delta = majority_vote_sign(msgs, proto.sign_step)
+            else:
+                mean = jnp.mean(msgs, axis=0)
+                if proto.name == "stc":
+                    carried = mean + server_res
+                    global_delta, _ = stc_compress(carried, proto.sparsity_down)
+                    server_res = carried - global_delta
+                else:
+                    global_delta = mean
+            new_params = params_vec + global_delta
+            return new_params, server_res, new_mom, new_res, global_delta
+
+        return jax.jit(round_fn)
+
+    def _eval_batch(self, params_vec, x, y):
+        params = unflatten_pytree(params_vec, self.spec)
+        logits = self.apply_fn(params, x)
+        return jnp.sum(jnp.argmax(logits, -1) == y)
+
+    # ----------------------------------------------------------------- host
+    def _sample_batches(self, client_ids, local_iters):
+        b = self.env.batch_size
+        xs, ys = [], []
+        for cid in client_ids:
+            idx_pool = self.splits[cid]
+            need = local_iters * b
+            idx = self.rng.choice(idx_pool, size=need,
+                                  replace=len(idx_pool) < need)
+            xs.append(self.train.x[idx].reshape((local_iters, b) +
+                                                self.train.x.shape[1:]))
+            ys.append(self.train.y[idx].reshape(local_iters, b))
+        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+    def run_round(self):
+        env, proto = self.env, self.protocol
+        p = env.participants_per_round
+        sel = self.rng.choice(env.n_clients, size=p, replace=False)
+        xs, ys = self._sample_batches(sel, proto.local_iters)
+
+        mom_sel = self.client_mom[sel]
+        res_sel = self.client_res[sel]
+        (self.params_vec, self.server_res, new_mom, new_res,
+         global_delta) = self._round_fn(self.params_vec, self.server_res,
+                                        mom_sel, res_sel, xs, ys)
+        self.client_mom = self.client_mom.at[sel].set(new_mom)
+        self.client_res = self.client_res.at[sel].set(new_res)
+
+        # ---- bit ledger (Eq. 1) + partial-participation sync cost ----------
+        self.bits_up += p * proto.upload_bits(self.numel)
+        per_update = proto.download_bits(self.numel, n_participating=p)
+        model_bits = 32.0 * self.numel
+        for cid in sel:
+            skipped = self.round - self.last_seen[cid]
+            self.bits_down += self.cache.sync_bits(int(skipped), per_update,
+                                                   model_bits)
+            self.last_seen[cid] = self.round
+        self.cache.push(np.asarray(global_delta))
+        self.round += 1
+
+    def evaluate(self) -> float:
+        n = len(self.test.y)
+        bs = self.tcfg.eval_batch
+        correct = 0
+        for i in range(0, n, bs):
+            x = jnp.asarray(self.test.x[i : i + bs])
+            y = jnp.asarray(self.test.y[i : i + bs])
+            correct += int(self._eval_fn(self.params_vec, x, y))
+        return correct / n
+
+    def run(self, n_rounds: int, eval_every: int = 10, verbose: bool = False):
+        for r in range(n_rounds):
+            self.run_round()
+            if (r + 1) % eval_every == 0 or r == n_rounds - 1:
+                acc = self.evaluate()
+                rec = {
+                    "round": self.round,
+                    "iterations": self.round * self.protocol.local_iters,
+                    "acc": acc,
+                    "bits_up": self.bits_up,
+                    "bits_down": self.bits_down,
+                }
+                self.history.append(rec)
+                if verbose:
+                    print(f"round {self.round:5d} acc={acc:.4f} "
+                          f"upMB={self.bits_up/8e6:.1f}")
+        return self.history

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the STC compression hot-spot.
+
+* ``topk_threshold`` -- k-selection by threshold bisection (streaming counting
+  kernel; avoids a global sort over 10^6..10^10 gradient elements).
+* ``stc_compress``   -- fused residual-add → mask → ternarize → error-feedback
+  single-pass kernel (cuts HBM traffic ~2.25× vs the unfused chain).
+* ``ops``            -- jit'd public wrappers; ``ref`` -- pure-jnp oracles.
+
+Validated in ``interpret=True`` mode on CPU (tests sweep shapes & dtypes and
+assert_allclose against the oracles); on TPU pass ``interpret=False``.
+"""
+
+from .ops import stc_compress_kernel, stc_compress_ref, threshold_stats, topk_threshold
+from .stc_compress import stc_apply
+
+__all__ = [
+    "stc_compress_kernel",
+    "stc_compress_ref",
+    "threshold_stats",
+    "topk_threshold",
+    "stc_apply",
+]

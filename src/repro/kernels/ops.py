@@ -1,0 +1,74 @@
+"""Public jit'd wrappers over the Pallas STC kernels.
+
+``stc_compress_kernel(delta, residual, p)`` is the drop-in kernel-backed
+equivalent of ``core.residual.compress_with_feedback(·, ·, stc_compress)``:
+
+    1. k-selection by threshold bisection   (topk_threshold kernel, ~32 passes)
+    2. µ = sum|carried above t| / count     (reuses the final stats pass)
+    3. fused ternarize + error-feedback     (stc_compress kernel, 1 pass)
+
+On CPU the kernels run in ``interpret=True`` mode (the default here); on TPU
+pass ``interpret=False``.  ``ref.py`` holds the pure-jnp oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .stc_compress import stc_apply
+from .topk_threshold import DEFAULT_BLOCK_ROWS, threshold_stats, topk_threshold
+
+__all__ = [
+    "stc_compress_kernel",
+    "stc_compress_ref",
+    "threshold_stats",
+    "topk_threshold",
+]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "iters", "block_rows", "interpret")
+)
+def stc_compress_kernel(
+    delta: jnp.ndarray,
+    residual: jnp.ndarray,
+    p: float,
+    *,
+    iters: int = 32,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Kernel-backed STC with error feedback over flat fp32 vectors.
+
+    Returns ``(tern, new_residual, mu, thresh, nnz)``.
+    """
+    n = delta.size
+    k = max(int(n * p), 1)
+    carried = delta.astype(jnp.float32) + residual.astype(jnp.float32)
+    thresh, cnt, s = topk_threshold(
+        carried, k, iters=iters, block_rows=block_rows, interpret=interpret
+    )
+    mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+    tern, new_res = stc_apply(
+        delta, residual, thresh, mu, block_rows=block_rows, interpret=interpret
+    )
+    return tern, new_res, mu, thresh, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("p", "iters"))
+def stc_compress_ref(delta: jnp.ndarray, residual: jnp.ndarray, p: float,
+                     *, iters: int = 32):
+    """Pure-jnp oracle with identical signature/semantics to the kernel path."""
+    n = delta.size
+    k = max(int(n * p), 1)
+    carried = delta.astype(jnp.float32) + residual.astype(jnp.float32)
+    thresh = ref.topk_threshold_ref(carried, k, iters=iters)
+    cnt, s = ref.threshold_stats_ref(carried, thresh)
+    mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+    tern, new_res = ref.stc_fused_ref(delta.astype(jnp.float32),
+                                      residual.astype(jnp.float32), thresh, mu)
+    return tern, new_res, mu, thresh, cnt

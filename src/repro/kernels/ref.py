@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match (assert_allclose in
+tests).  They are also the CPU fallback used when pallas is unavailable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "threshold_stats_ref",
+    "topk_threshold_ref",
+    "stc_fused_ref",
+]
+
+
+def threshold_stats_ref(x: jnp.ndarray, thresh: jnp.ndarray):
+    """(count, sum|x|) of entries with |x| >= thresh.  x: flat fp32."""
+    a = jnp.abs(x)
+    mask = a >= thresh
+    return jnp.sum(mask.astype(jnp.int32)), jnp.sum(jnp.where(mask, a, 0.0))
+
+
+def topk_threshold_ref(x: jnp.ndarray, k: int, iters: int = 32):
+    """Magnitude threshold t such that count(|x| >= t) ~= k, via bisection.
+
+    This is the kernel-friendly k-selection: binary search on the threshold
+    over [0, max|x|], `iters` rounds (fp32 has 24 mantissa bits; 32 halvings
+    of the bracket give exact-to-ulp selection for any realistic k).
+    Matches `jax.lax.top_k`'s kth magnitude up to ties.
+    """
+    a = jnp.abs(x)
+    # invariant: count(lo) >= k, count(hi) < k  (count(t) = #{|x| >= t})
+    hi = jnp.max(a) * jnp.asarray(1.0 + 1e-6, a.dtype) + jnp.asarray(1e-30, a.dtype)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((a >= mid).astype(jnp.int32))
+        keep = cnt >= k
+        lo = jnp.where(keep, mid, lo)
+        hi = jnp.where(keep, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    # lo is the largest bracketed threshold with count >= k
+    return lo
+
+
+def stc_fused_ref(delta: jnp.ndarray, residual: jnp.ndarray, thresh: jnp.ndarray,
+                  mu: jnp.ndarray):
+    """Fused STC apply: given carried = delta + residual, a magnitude threshold
+    and the (precomputed) ternary magnitude µ, produce
+
+        tern        = µ * sign(carried) * (|carried| >= thresh)
+        new_residual = carried - tern
+
+    delta/residual flat fp32; thresh/mu scalars.  Returns (tern, new_residual).
+    """
+    carried = delta + residual
+    mask = jnp.abs(carried) >= thresh
+    tern = jnp.where(mask, mu * jnp.sign(carried), 0.0)
+    return tern.astype(delta.dtype), (carried - tern).astype(residual.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused STC apply (residual-add → mask → ternarize → EF).
+
+Naively, one STC round over the flat parameter vector does
+
+    carried = ΔW + A          (read 2n, write n)
+    mask    = |carried| >= t  (read n)
+    tern    = µ·sign·mask     (read n, write n)
+    A'      = carried - tern  (read 2n, write n)
+
+≈ 9n fp32 HBM moves.  This kernel fuses everything into ONE pass: read
+(ΔW, A) once, write (T*, A') once — 4n moves, a 2.25× cut on the dominant
+memory term of the compression step.  Inputs are tiled to (block_rows, 128)
+VMEM blocks; the threshold t and magnitude µ are scalar (1,1) operands
+computed by the bisection kernel in :mod:`.topk_threshold`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .topk_threshold import LANE, DEFAULT_BLOCK_ROWS, _pad_2d
+
+__all__ = ["stc_apply"]
+
+
+def _fused_kernel(d_ref, r_ref, t_ref, mu_ref, tern_ref, res_ref,
+                  *, block_rows: int, n: int):
+    i = pl.program_id(0)
+    d = d_ref[...].astype(jnp.float32)
+    r = r_ref[...]
+    t = t_ref[0, 0]
+    mu = mu_ref[0, 0]
+
+    carried = d + r
+
+    row = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    gidx = (i * block_rows + row) * LANE + col
+    valid = gidx < n
+
+    m = (jnp.abs(carried) >= t) & valid
+    tern = jnp.where(m, mu * jnp.sign(carried), jnp.zeros_like(carried))
+    tern_ref[...] = tern
+    res_ref[...] = carried - tern
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stc_apply(
+    delta: jnp.ndarray,
+    residual: jnp.ndarray,
+    thresh: jnp.ndarray,
+    mu: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Fused  tern = µ·sign(Δ+A)·[|Δ+A| >= t];  A' = (Δ+A) - tern.
+
+    delta/residual: flat fp32 vectors of equal length; thresh/mu scalars.
+    Returns ``(tern, new_residual)`` flat fp32 vectors of the input length.
+    """
+    assert delta.shape == residual.shape, (delta.shape, residual.shape)
+    n = delta.size
+    d2 = _pad_2d(delta.astype(jnp.float32), block_rows)
+    r2 = _pad_2d(residual.astype(jnp.float32), block_rows)
+    grid = (d2.shape[0] // block_rows,)
+    t2 = thresh.reshape(1, 1).astype(jnp.float32)
+    mu2 = mu.reshape(1, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_fused_kernel, block_rows=block_rows, n=n)
+    tern, res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(d2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(d2.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(d2, r2, t2, mu2)
+    return tern.reshape(-1)[:n], res.reshape(-1)[:n]

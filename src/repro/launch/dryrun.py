@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, WITHOUT allocating any real arrays.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+For each combination this prints/records:
+  * compiled.memory_analysis()  -- proves the working set fits per device
+  * compiled.cost_analysis()    -- HLO FLOPs / bytes for the roofline
+  * the collective schedule parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    bytes) -- the collective roofline term
+
+Results go to artifacts/dryrun/<arch>__<shape>__<mesh>.json; benchmarks/
+roofline.py turns them into the EXPERIMENTS.md tables.
+
+NOTE the XLA_FLAGS line above MUST run before any other import that touches
+jax -- jax locks the device count on first backend init.  This env var is set
+only here, never globally (smoke tests and benches see 1 device).
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import (make_decode_step, make_prefill_step,
+                                serve_state_structs)
+from repro.launch.train import (TrainConfig, batch_shardings,
+                                init_train_state, make_train_step,
+                                state_shardings)
+from repro.sharding.rules import batch_spec
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the optimized HLO.
+
+    Returns {kind: {"count": n, "bytes": total_result_bytes}}.  The roofline
+    converts result bytes to wire bytes with the standard ring-algorithm
+    factors (see benchmarks/roofline.py).
+    """
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, kind = m.groups()
+        nel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    nel *= int(d)
+        b = nel * _DTYPE_BYTES.get(dtype, 4)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def _attach(struct_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+        if hasattr(s, "shape") else s,
+        struct_tree, sharding_tree)
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                tc: TrainConfig | None = None, verbose: bool = True,
+                logit_chunk: int = 0, cache_shard: str = "heads",
+                moe_dispatch: str = "", flash_bf16: bool = False) -> dict:
+    """Lower + compile one (arch, shape, mesh). Returns the result record.
+
+    ``logit_chunk``/``cache_shard`` are §Perf levers (0/"heads" = baseline).
+    """
+    import dataclasses
+    from repro.sharding import rules as sharding_rules
+    if flash_bf16:
+        from repro.models import flash as flash_mod
+        flash_mod.P_BLOCK_DTYPE = jnp.bfloat16
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch, shape_name)
+    if logit_chunk:
+        cfg = dataclasses.replace(cfg, logit_chunk=logit_chunk)
+    if moe_dispatch and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch))
+    sharding_rules.CACHE_SHARD_MODE = cache_shard
+    shape = INPUT_SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    tc = tc or TrainConfig(protocol="stc")
+
+    n_clients = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_clients *= mesh.shape[a]
+
+    t0 = time.time()
+    if shape.kind == "train":
+        state_struct = jax.eval_shape(
+            functools.partial(init_train_state, cfg, tc, n_clients),
+            jax.random.PRNGKey(0))
+        st_sh = state_shardings(state_struct, mesh)
+        state_struct = _attach(state_struct, st_sh)
+        b_sh = batch_shardings(specs, mesh, shape.global_batch)
+        batch_struct = _attach(specs, b_sh)
+        step = make_train_step(cfg, mesh, tc)
+        lowered = step.lower(state_struct, batch_struct)
+    elif shape.kind == "prefill":
+        params_struct, _ = serve_state_structs(cfg, mesh, shape.global_batch,
+                                               2)
+        b_sh = batch_shardings(specs, mesh, shape.global_batch)
+        batch_struct = _attach(specs, b_sh)
+        step = make_prefill_step(cfg, mesh)
+        lowered = step.lower(params_struct, batch_struct)
+    else:  # decode
+        params_struct, caches_struct = serve_state_structs(
+            cfg, mesh, shape.global_batch, shape.seq_len)
+        bs = batch_spec(mesh, shape.global_batch)
+        token_struct = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, bs))
+        step = make_decode_step(cfg, mesh, cache_mode=cache_shard
+                                if cache_shard in ("batch", "local", "seq")
+                                else "heads")
+        if "memory" in specs:
+            mem = specs["memory"]
+            mem_struct = jax.ShapeDtypeStruct(
+                mem.shape, mem.dtype, sharding=NamedSharding(mesh, bs))
+            lowered = step.lower(params_struct, token_struct, caches_struct,
+                                 mem_struct)
+        else:
+            lowered = step.lower(params_struct, token_struct, caches_struct)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_rec[k] = int(v)
+    colls = parse_collectives(compiled.as_text())
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": _mesh_tag(multi_pod),
+        "kind": shape.kind,
+        "protocol": tc.protocol if shape.kind == "train" else "serve",
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem_rec,
+        "collectives": colls,
+        "params": cfg.param_count(),
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+              f"colls={ {k: v['count'] for k, v in colls.items()} } "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        if mem_rec:
+            print(f"         memory_analysis: { {k: f'{v/2**30:.2f}GiB' for k, v in mem_rec.items()} }")
+    return rec
+
+
+def save_record(rec: dict, out_dir: str = None):
+    out_dir = out_dir or os.path.abspath(ARTIFACTS)
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("variant"):
+        fname += f"__{rec['variant']}"
+    path = os.path.join(out_dir, fname + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 = 512-chip mesh")
+    ap.add_argument("--protocol", default="stc",
+                    choices=("stc", "topk", "signsgd", "fedavg", "baseline"))
+    ap.add_argument("--variant", default="",
+                    help="tag appended to the artifact filename (perf iters)")
+    ap.add_argument("--logit-chunk", type=int, default=0,
+                    help="chunked LM head size (§Perf lever; 0 = baseline)")
+    ap.add_argument("--stc-iters", type=int, default=32,
+                    help="k-selection bisection rounds (§Perf lever)")
+    ap.add_argument("--flash-bf16", action="store_true",
+                    help="bf16 probability blocks in flash attention "
+                         "(§Perf lever A4)")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=("", "ragged", "capacity"),
+                    help="MoE dispatch impl (§Perf lever)")
+    ap.add_argument("--cache-shard", default="heads",
+                    choices=("heads", "hd", "batch", "local", "seq"),
+                    help="decode-cache sharding (§Perf lever; batch = pin "
+                         "caches batch-only inside the step)")
+    args = ap.parse_args()
+
+    tc = TrainConfig(protocol=args.protocol, stc_iters=args.stc_iters)
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        try:
+            rec = lower_combo(arch, shape, multi_pod=args.multi_pod, tc=tc,
+                              logit_chunk=args.logit_chunk,
+                              cache_shard=args.cache_shard,
+                              moe_dispatch=args.moe_dispatch,
+                              flash_bf16=args.flash_bf16)
+            if args.variant:
+                rec["variant"] = args.variant
+            save_record(rec)
+        except Exception as e:  # noqa: BLE001 -- report and continue
+            failures.append((arch, shape, repr(e)[:500]))
+            print(f"[dryrun] FAIL {arch} x {shape}: {repr(e)[:300]}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        raise SystemExit(1)
+    print(f"\nall {len(combos)} combinations lowered + compiled OK "
+          f"on mesh {_mesh_tag(args.multi_pod)}")
+
+
+if __name__ == "__main__":
+    main()

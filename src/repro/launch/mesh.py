@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod:  (16, 16)      axes ("data", "model")  -- 256 chips (v5e pod)
+Multi pod:   (2, 16, 16)   axes ("pod", "data", "model") -- 512 chips
+
+``data`` (x ``pod``) carries the federated clients: one data-parallel group
+per client cohort.  ``model`` is tensor parallelism inside a client replica.
+Defined as functions so importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]
+
+
+def _mesh(shape, axes):
+    # Auto axis types: GSPMD propagates the "model" axis; shard_map takes the
+    # client axes manual.  (Explicit pinning is left to a future jax.)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    >= data*model*(pod or 1))."""
+    if pod:
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))

@@ -1,0 +1,327 @@
+"""Distributed federated train_step for the production mesh.
+
+Mapping of the paper's protocol onto the pod (DESIGN.md §2):
+
+* manual mesh axes ("pod", "data") carry the CLIENTS -- one client cohort per
+  data-parallel block, via ``jax.shard_map`` (auto axis "model" = tensor
+  parallelism inside a client, handled by GSPMD);
+* each client computes grads on its own batch shard ONLY (no gradient psum --
+  that is the point of federated learning);
+* upstream: per-client tree-STC with error feedback (Eqs. 8-11);
+* aggregation + downstream: ``lax.psum`` of the ternary messages over the
+  client axes (the only protocol-level collective), then server tree-STC with
+  its own residual (Eqs. 10/12) -- computed identically on every block, so the
+  broadcast is implicit;
+* supported protocols: stc | topk | signsgd | fedavg | baseline.
+
+Momentum defaults OFF per the paper's lesson (6) (stale client momentum harms
+non-iid + partial-participation training); pass momentum>0 to enable
+per-client buffers.
+
+Run as a script for a CPU demo on a debug mesh:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.train --arch smollm-135m
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import (sign_compress_tree, stc_compress_tree,
+                                    tree_add, tree_numel)
+from repro.models import init_model, lm_loss
+from repro.models.config import ModelConfig
+from repro.sharding.rules import (batch_spec, fit_spec, param_shardings,
+                                  param_specs)
+
+__all__ = ["TrainConfig", "init_train_state", "make_train_step",
+           "state_shardings", "batch_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    protocol: str = "stc"           # stc | topk | signsgd | fedavg | baseline
+    lr: float = 0.1
+    momentum: float = 0.0           # paper lesson (6): keep 0 in fed settings
+    sparsity_up: float = 1 / 400
+    sparsity_down: float = 1 / 400
+    sign_step: float = 2e-4
+    local_iters: int = 1            # fedavg delay period n
+    compute_dtype: Any = jnp.bfloat16
+    stc_iters: int = 32             # k-selection bisection rounds (§Perf lever)
+
+
+def _needs_client_residual(tc: TrainConfig) -> bool:
+    return tc.protocol in ("stc", "topk")
+
+
+def _needs_server_residual(tc: TrainConfig) -> bool:
+    return tc.protocol == "stc"
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, n_clients: int, key):
+    """TrainState pytree. Residuals/momentum are fp32, client-major."""
+    params = init_model(cfg, key)
+    state = {"params": params, "step": jnp.zeros((), jnp.int32)}
+    f32_like = lambda p: jnp.zeros(p.shape, jnp.float32)
+    stacked = lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32)
+    if _needs_client_residual(tc):
+        state["client_res"] = jax.tree.map(stacked, params)
+    if _needs_server_residual(tc):
+        state["server_res"] = jax.tree.map(f32_like, params)
+    if tc.momentum > 0:
+        state["momentum"] = jax.tree.map(stacked, params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def _client_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def state_shardings(state, mesh):
+    """NamedShardings for the TrainState: params/server_res model-sharded,
+    client-major buffers additionally split over the client axes."""
+    ca = _client_axes(mesh)
+    pspecs = param_specs(state["params"])
+
+    def stack_spec(s: P) -> P:
+        return P(ca, *s)
+
+    def shard(leaf, s):
+        return NamedSharding(mesh, fit_spec(s, leaf.shape, mesh))
+
+    def shard_stacked(leaf, s):
+        return NamedSharding(mesh, fit_spec(stack_spec(s), leaf.shape, mesh))
+
+    sh = {
+        "params": jax.tree.map(shard, state["params"], pspecs),
+        "step": NamedSharding(mesh, P()),
+    }
+    if "client_res" in state:
+        sh["client_res"] = jax.tree.map(shard_stacked, state["client_res"],
+                                        pspecs)
+    if "server_res" in state:
+        sh["server_res"] = jax.tree.map(shard, state["server_res"], pspecs)
+    if "momentum" in state:
+        sh["momentum"] = jax.tree.map(shard_stacked, state["momentum"],
+                                      pspecs)
+    return sh
+
+
+def batch_shardings(batch, mesh, global_batch: int):
+    bs = batch_spec(mesh, global_batch)
+    return jax.tree.map(lambda _: NamedSharding(mesh, bs), batch)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` wrapped in
+    shard_map over the client axes (auto axis: "model")."""
+    ca = _client_axes(mesh)
+    n_clients = math.prod(mesh.shape[a] for a in ca) if ca else 1
+    numel = cfg.param_count()
+    proto = tc.protocol
+
+    def loss_of(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       prefix=batch.get("prefix"), frames=batch.get("frames"),
+                       compute_dtype=tc.compute_dtype)
+
+    def local_delta(params, mom, batch):
+        """One client's update ΔW (and new momentum). fedavg runs
+        ``local_iters`` sequential SGD steps over microbatches."""
+        if proto == "fedavg" and tc.local_iters > 1:
+            n = tc.local_iters
+            b_local = batch["tokens"].shape[0]
+            assert b_local % n == 0, (b_local, n)
+            micro = {k: v.reshape((n, b_local // n) + v.shape[1:])
+                     for k, v in batch.items()}
+
+            def step(carry, mb):
+                p, v = carry
+                loss, g = jax.value_and_grad(loss_of)(p, mb)
+                if tc.momentum > 0:
+                    v = jax.tree.map(
+                        lambda vv, gg: tc.momentum * vv +
+                        gg.astype(jnp.float32), v, g)
+                    upd = v
+                else:
+                    upd = g
+                p = jax.tree.map(
+                    lambda pp, uu: (pp.astype(jnp.float32) -
+                                    tc.lr * uu.astype(jnp.float32)
+                                    ).astype(pp.dtype), p, upd)
+                return (p, v), loss
+
+            (p_end, mom), losses = jax.lax.scan(step, (params, mom), micro)
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                p_end, params)
+            return delta, mom, jnp.mean(losses)
+
+        loss, g = jax.value_and_grad(loss_of)(params, batch)
+        if tc.momentum > 0:
+            mom = jax.tree.map(
+                lambda vv, gg: tc.momentum * vv + gg.astype(jnp.float32),
+                mom, g)
+            upd = mom
+        else:
+            upd = g
+        delta = jax.tree.map(lambda u: -tc.lr * u.astype(jnp.float32), upd)
+        return delta, mom, loss
+
+    def step_fn(state, batch):
+        params = state["params"]
+        mom = None
+        if "momentum" in state:
+            mom = jax.tree.map(lambda x: x[0], state["momentum"])
+
+        delta, mom, loss = local_delta(params, mom, batch)
+        metrics = {"loss": jax.lax.pmean(loss, ca) if ca else loss}
+        new_state = dict(state)
+        new_state["step"] = state["step"] + 1
+        if mom is not None:
+            new_state["momentum"] = jax.tree.map(lambda x: x[None], mom)
+
+        if proto in ("stc", "topk"):
+            cres = jax.tree.map(lambda x: x[0], state["client_res"])
+            carried = tree_add(delta, cres)
+            tern, st = stc_compress_tree(carried, tc.sparsity_up, numel=numel,
+                                         iters=tc.stc_iters)
+            if proto == "topk":
+                # pure top-k keeps magnitudes: mask = |x| >= thresh
+                tern = jax.tree.map(
+                    lambda x: jnp.where(jnp.abs(x) >= st.thresh, x, 0.0),
+                    carried)
+            new_cres = jax.tree.map(lambda c, t: c - t, carried, tern)
+            new_state["client_res"] = jax.tree.map(lambda x: x[None], new_cres)
+            # ---- upload: the ONLY protocol-level collective ----------------
+            mean_msg = jax.tree.map(
+                lambda t: jax.lax.psum(t, ca) / n_clients, tern) if ca else tern
+            metrics["nnz_up"] = st.nnz
+            if proto == "stc":
+                carried_srv = tree_add(mean_msg, state["server_res"])
+                down, st2 = stc_compress_tree(carried_srv, tc.sparsity_down,
+                                              numel=numel, iters=tc.stc_iters)
+                new_state["server_res"] = jax.tree.map(
+                    lambda c, t: c - t, carried_srv, down)
+                metrics["nnz_down"] = st2.nnz
+                global_delta = down
+            else:
+                global_delta = mean_msg
+        elif proto == "signsgd":
+            msg = sign_compress_tree(delta, tc.sign_step)
+            if ca:
+                votes = jax.tree.map(lambda t: jax.lax.psum(jnp.sign(t), ca),
+                                     msg)
+            else:
+                votes = jax.tree.map(jnp.sign, msg)
+            global_delta = jax.tree.map(
+                lambda v: tc.sign_step * jnp.sign(v), votes)
+        else:  # baseline / fedavg: dense mean of client updates
+            global_delta = jax.tree.map(
+                lambda t: (jax.lax.psum(t, ca) / n_clients) if ca else t,
+                delta)
+
+        new_state["params"] = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) +
+                          d.astype(jnp.float32)).astype(p.dtype),
+            params, global_delta)
+        return new_state, metrics
+
+    if not ca:
+        return step_fn
+
+    state_specs_in = {
+        "params": P(), "step": P(),
+    }
+    out_specs_state = {"params": P(), "step": P()}
+    if proto in ("stc", "topk"):
+        state_specs_in["client_res"] = P(ca)
+        out_specs_state["client_res"] = P(ca)
+    if proto == "stc":
+        state_specs_in["server_res"] = P()
+        out_specs_state["server_res"] = P()
+    # momentum specs added dynamically at call time via same prefix trick
+    in_specs = (state_specs_in, P(ca))
+    out_specs = (out_specs_state, P())
+
+    def wrapped(state, batch):
+        specs_in = dict(state_specs_in)
+        specs_out = dict(out_specs_state)
+        if "momentum" in state:
+            specs_in["momentum"] = P(ca)
+            specs_out["momentum"] = P(ca)
+        # NOTE: partial-manual shard_map must run through jit (the eager impl
+        # path mishandles check_vma=False with auto axes in jax 0.8).
+        f = jax.shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
+                          out_specs=(specs_out, P()),
+                          axis_names=set(ca), check_vma=False)
+        return f(state, batch)
+
+    return jax.jit(wrapped)
+
+
+# ---------------------------------------------------------------------------
+# CPU demo driver
+# ---------------------------------------------------------------------------
+
+
+def main():
+    import argparse
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.data import make_lm_tokens
+    from repro.launch.mesh import make_debug_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--protocol", default="stc")
+    args = ap.parse_args()
+
+    if len(jax.devices()) < 4:
+        raise SystemExit("run with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 for the debug mesh")
+    mesh = make_debug_mesh(data=2, model=2)
+    cfg = get_smoke_config(args.arch)
+    tc = TrainConfig(protocol=args.protocol, lr=0.05, sparsity_up=1 / 50,
+                     sparsity_down=1 / 50)
+    state = init_train_state(cfg, tc, n_clients=2, key=jax.random.PRNGKey(0))
+
+    toks = make_lm_tokens(n_tokens=4 * 128 + 1, vocab=cfg.vocab_size)
+    batch = {"tokens": jnp.asarray(toks[:-1].reshape(4, 128)),
+             "labels": jnp.asarray(toks[1:].reshape(4, 128))}
+    if cfg.encoder is not None:
+        batch["frames"] = jnp.zeros((4, cfg.encoder.n_frames, cfg.d_model),
+                                    jnp.float32)
+    if cfg.n_prefix_tokens:
+        batch["prefix"] = jnp.zeros((4, cfg.n_prefix_tokens, cfg.d_model),
+                                    jnp.float32)
+
+    with jax.set_mesh(mesh):
+        step = make_train_step(cfg, mesh, tc)
+        for i in range(args.steps):
+            state, metrics = step(state, batch)
+            print(f"step {i}: loss={float(metrics['loss']):.4f}",
+                  {k: int(v) for k, v in metrics.items() if k != "loss"})
+
+
+if __name__ == "__main__":
+    main()

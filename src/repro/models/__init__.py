@@ -1,0 +1,14 @@
+"""Model zoo: unified TransformerLM covering the 10 assigned architectures
+plus the paper's own small federated benchmarks."""
+
+from .config import (EncoderConfig, MLAConfig, ModelConfig, MoEConfig,
+                     RGLRUConfig, SSMConfig)
+from .transformer import (decode_step, encode_frames, forward, init_cache,
+                          init_model, lm_loss)
+from . import paper_models
+
+__all__ = [
+    "EncoderConfig", "MLAConfig", "ModelConfig", "MoEConfig", "RGLRUConfig",
+    "SSMConfig", "decode_step", "encode_frames", "forward", "init_cache",
+    "init_model", "lm_loss", "paper_models",
+]

@@ -1,0 +1,69 @@
+"""Basic layers: norms, MLPs, embeddings, RoPE. Pure-functional (params are
+nested dicts of jnp arrays); init in fp32, compute dtype chosen by caller."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "rms_norm", "rms_norm_init", "mlp_init", "mlp_apply",
+    "embed_init", "rope_freqs", "apply_rope",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def rms_norm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * params["g"]).astype(dt)
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff),
+            "w_up": dense_init(ks[1], d_model, d_ff),
+            "w_down": dense_init(ks[2], d_ff, d_model),
+        }
+    return {
+        "w_up": dense_init(ks[0], d_model, d_ff),
+        "w_down": dense_init(ks[1], d_ff, d_model),
+    }
+
+
+def mlp_apply(params, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def embed_init(key, vocab: int, d_model: int):
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions: (..., S) int32 -> (cos, sin) of shape (..., S, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, dim) with rotary applied over the last dim (paired)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(x.dtype)

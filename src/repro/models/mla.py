@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Keys/values are up-projected from a low-rank latent ``c_kv = x @ W_dkv``
+(rank ``kv_lora_rank``); a small decoupled RoPE key (``qk_rope_head_dim``,
+shared across heads) carries positional information.  The KV cache stores only
+``(c_kv, k_rope)`` -- (kv_lora + rope_dim) floats per position instead of
+``2·H·hd`` -- which is the whole point of MLA for long-context decode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _attention
+from .config import MLAConfig
+from .layers import apply_rope, dense_init, rope_freqs
+
+__all__ = ["MLACache", "mla_init", "mla_apply", "mla_decode", "init_mla_cache"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, S, kv_lora)
+    k_rope: jnp.ndarray  # (B, S, rope_dim)
+    idx: jnp.ndarray
+
+
+def mla_init(key, d_model: int, n_heads: int, cfg: MLAConfig):
+    ks = jax.random.split(key, 6)
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * qk_dim),
+        "w_dkv": dense_init(ks[1], d_model, cfg.kv_lora_rank),
+        "w_uk": dense_init(ks[2], cfg.kv_lora_rank, n_heads * cfg.qk_nope_head_dim),
+        "w_uv": dense_init(ks[3], cfg.kv_lora_rank, n_heads * cfg.v_head_dim),
+        "w_kr": dense_init(ks[4], d_model, cfg.qk_rope_head_dim),
+        "wo": dense_init(ks[5], n_heads * cfg.v_head_dim, d_model),
+    }
+
+
+def _mla_qkv(params, x, n_heads: int, cfg: MLAConfig, positions, rope_theta):
+    """Returns q (B,S,H,qk_dim), k (B,S,H,qk_dim), v (B,S,H,v_dim)."""
+    b, s, _ = x.shape
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+
+    c_kv = x @ params["w_dkv"].astype(x.dtype)                   # (B,S,r)
+    k_nope = (c_kv @ params["w_uk"].astype(x.dtype)).reshape(
+        b, s, n_heads, cfg.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"].astype(x.dtype)).reshape(
+        b, s, n_heads, cfg.v_head_dim)
+    k_rope = (x @ params["w_kr"].astype(x.dtype))[:, :, None, :]  # shared head
+
+    cos, sin = rope_freqs(positions, cfg.qk_rope_head_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, n_heads, cfg.qk_rope_head_dim))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q, k, v, c_kv
+
+
+def mla_apply(params, x, *, n_heads: int, cfg: MLAConfig,
+              rope_theta: float = 10000.0, chunk: int = 1024,
+              window: int = 0) -> jnp.ndarray:
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v, _ = _mla_qkv(params, x, n_heads, cfg, positions, rope_theta)
+    # qk_dim != v_dim is handled (MLA); flash/chunked are dim-agnostic
+    out = _attention(q, k, v, causal=True, window=window, chunk=chunk)
+    return out.reshape(b, s, n_heads * cfg.v_head_dim) @ params["wo"].astype(x.dtype)
+
+
+def init_mla_cache(batch: int, s_cache: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return MLACache(
+        c_kv=jnp.zeros((batch, s_cache, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, s_cache, cfg.qk_rope_head_dim), dtype),
+        idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(params, x, cache: MLACache, *, n_heads: int, cfg: MLAConfig,
+               rope_theta: float = 10000.0):
+    """One-token decode from the latent cache. x: (B,1,d)."""
+    b = x.shape[0]
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    pos = cache.idx[None]
+
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    cos, sin = rope_freqs(pos, cfg.qk_rope_head_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_new = x @ params["w_dkv"].astype(x.dtype)                  # (B,1,r)
+    kr_new = apply_rope((x @ params["w_kr"].astype(x.dtype))[:, :, None, :],
+                        cos, sin)[:, :, 0, :]                    # (B,1,rope)
+
+    s_cache = cache.c_kv.shape[1]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, cache.idx, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, cache.idx, 0))
+
+    # absorbed attention: score = q_nope·(c_kv W_uk) + q_rope·k_rope
+    # (materializing per-head keys for the cache would defeat MLA; instead we
+    # absorb W_uk into the query -- the classic MLA decode trick.)
+    w_uk = params["w_uk"].astype(x.dtype).reshape(
+        cfg.kv_lora_rank, n_heads, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)       # (B,H,r)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                       c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.float32(qk_dim))
+    scores = (s_lat + s_rope) * scale
+    valid = jnp.arange(s_cache) <= cache.idx
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+
+    # values from latent: o_lat = p·c_kv, then up-project through W_uv
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
+    w_uv = params["w_uv"].astype(x.dtype).reshape(
+        cfg.kv_lora_rank, n_heads, cfg.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), w_uv)
+    out = o.reshape(b, 1, n_heads * cfg.v_head_dim) @ params["wo"].astype(x.dtype)
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, idx=cache.idx + 1)

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: token-choice top-k router, shared + routed experts.
+
+Dispatch is the TPU-native sort-based formulation: tokens are argsorted by
+expert id and pushed through `jax.lax.ragged_dot` (grouped matmul over the
+expert dimension), which gives the *true* active-expert FLOPs
+(2·T·k·d·d_ff per matmul) instead of the quadratic one-hot-einsum dispatch.
+Expert weights are tensor-sharded on their hidden (d_expert) dim over the
+``model`` axis -- token routing stays local to the data shard, so the MoE
+introduces no all_to_all in the baseline sharding (see DESIGN.md; an
+expert-parallel all_to_all layout is a recorded hillclimb lever).
+
+Includes the standard switch-style load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+from .layers import dense_init, mlp_apply, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, act: str = "swiglu"):
+    ks = jax.random.split(key, 3 + cfg.n_shared)
+    d_e = cfg.d_expert
+    e = cfg.n_experts
+    scale = 1.0 / jnp.sqrt(d_model)
+    p = {
+        "router": dense_init(ks[0], d_model, e, scale=0.02),
+        # stacked expert weights: (E, d, f) / (E, f, d)
+        "w_gate": jax.random.normal(ks[1], (e, d_model, d_e), jnp.float32) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d_model, d_e), jnp.float32) * scale,
+        "w_down": jax.random.normal(
+            jax.random.fold_in(ks[2], 1), (e, d_e, d_model), jnp.float32
+        ) * (1.0 / jnp.sqrt(d_e)),
+    }
+    for i in range(cfg.n_shared):
+        p[f"shared_{i}"] = mlp_init(ks[3 + i], d_model, d_e, act)
+    return p
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig, act: str = "swiglu"):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    k = cfg.top_k
+    e = cfg.n_experts
+
+    logits = xt @ params["router"].astype(x.dtype)               # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance aux loss (switch-transformer style) -----------------
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    one_hot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (T,k,E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)              # tokens/expert
+    aux = cfg.aux_loss_coef * e * jnp.sum(me * ce) / k
+
+    if cfg.dispatch == "capacity":
+        out = _capacity_dispatch(params, xt, expert_idx, gate_vals, cfg, act)
+    else:
+        out = _ragged_dispatch(params, xt, expert_idx, gate_vals, cfg, act)
+
+    for i in range(cfg.n_shared):
+        out = out + mlp_apply(
+            jax.tree.map(lambda w: w.astype(x.dtype), params[f"shared_{i}"]),
+            xt, act)
+    return out.reshape(b, s, d), aux
+
+
+def _ragged_dispatch(params, xt, expert_idx, gate_vals, cfg: MoEConfig,
+                     act: str):
+    """Sort-based exact dispatch through jax.lax.ragged_dot."""
+    t, d = xt.shape
+    k, e = cfg.top_k, cfg.n_experts
+    flat_expert = expert_idx.reshape(-1)                         # (T*k,)
+    sort_idx = jnp.argsort(flat_expert)                          # (T*k,)
+    token_of = sort_idx // k                                     # source token
+    xs = jnp.take(xt, token_of, axis=0)                          # (T*k, d)
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+
+    gate_h = jax.lax.ragged_dot(xs, params["w_gate"].astype(xt.dtype),
+                                group_sizes)
+    up_h = jax.lax.ragged_dot(xs, params["w_up"].astype(xt.dtype),
+                              group_sizes)
+    h = jax.nn.silu(gate_h) * up_h if act == "swiglu" else jax.nn.gelu(up_h)
+    out_s = jax.lax.ragged_dot(h, params["w_down"].astype(xt.dtype),
+                               group_sizes)
+
+    gates_sorted = jnp.take(gate_vals.reshape(-1), sort_idx)     # (T*k,)
+    out_s = out_s * gates_sorted[:, None].astype(out_s.dtype)
+    return jnp.zeros((t, d), out_s.dtype).at[token_of].add(out_s)
+
+
+def _capacity_dispatch(params, xt, expert_idx, gate_vals, cfg: MoEConfig,
+                       act: str):
+    """Fixed-capacity dispatch: gather tokens into (E, C, d) buffers, one
+    batched einsum per matmul, scatter back.  FLOPs = capacity_factor x the
+    active-expert cost (the HLO accounting matches the MODEL_FLOPS roofline,
+    unlike ragged_dot's CPU lowering).  Overflow tokens are DROPPED (their
+    gate contribution is zero) -- the standard switch/MaxText trade-off.
+    """
+    t, d = xt.shape
+    k, e = cfg.top_k, cfg.n_experts
+    cap = max(int(t * k * cfg.capacity_factor / e + 0.999), 8)
+    cap = min(cap, t * k)
+
+    flat_expert = expert_idx.reshape(-1)                         # (T*k,)
+    sort_idx = jnp.argsort(flat_expert)
+    grp = jnp.take(flat_expert, sort_idx)                        # sorted ids
+    counts = jnp.bincount(flat_expert, length=e)
+    starts = jnp.cumsum(counts) - counts                         # (E,)
+    rank = jnp.arange(t * k) - jnp.take(starts, grp)             # pos in group
+    keep = rank < cap
+    dest = jnp.where(keep, grp * cap + rank, e * cap)            # pad slot
+
+    token_of = sort_idx // k                                     # (T*k,)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[dest].set(jnp.take(xt, token_of, axis=0))
+    xe = buf[: e * cap].reshape(e, cap, d)                       # (E, C, d)
+
+    gate_h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(xt.dtype))
+    up_h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(xt.dtype))
+    h = jax.nn.silu(gate_h) * up_h if act == "swiglu" else jax.nn.gelu(up_h)
+    oe = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xt.dtype))
+
+    oe_flat = jnp.concatenate(
+        [oe.reshape(e * cap, d), jnp.zeros((1, d), oe.dtype)], axis=0)
+    out_s = jnp.take(oe_flat, jnp.where(keep, dest, e * cap), axis=0)
+    gates_sorted = jnp.take(gate_vals.reshape(-1), sort_idx)
+    out_s = out_s * (gates_sorted * keep)[:, None].astype(out_s.dtype)
+    return jnp.zeros((t, d), out_s.dtype).at[token_of].add(out_s)

@@ -1,0 +1,143 @@
+"""The paper's own benchmark models, in pure JAX.
+
+The paper evaluates on VGG11*@CIFAR, CNN@KWS, LSTM@Fashion-MNIST and logistic
+regression@MNIST.  This container is offline (no dataset downloads), so the
+federated experiments run these architectures on synthetic structured data of
+matching shapes (see repro.data.synthetic); the *qualitative* claims
+(non-iid degradation ordering, ternarization harmlessness, pareto dominance)
+are distribution-free.
+
+Every model follows the same functional interface:
+    init(key) -> params ;  apply(params, x) -> logits
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["logreg_init", "logreg_apply", "mlp_init_model", "mlp_apply_model",
+           "cnn_init", "cnn_apply", "lstm_init", "lstm_apply", "MODEL_ZOO"]
+
+
+# -- logistic regression (paper: 7850 params on 784->10) ---------------------
+
+def logreg_init(key, d_in: int = 784, n_classes: int = 10):
+    return {"w": dense_init(key, d_in, n_classes, scale=0.01),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def logreg_apply(params, x):
+    return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+
+# -- small MLP ----------------------------------------------------------------
+
+def mlp_init_model(key, d_in: int = 784, d_hidden: int = 128,
+                   n_classes: int = 10):
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d_in, d_hidden),
+            "b1": jnp.zeros((d_hidden,), jnp.float32),
+            "w2": dense_init(k2, d_hidden, n_classes),
+            "b2": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def mlp_apply_model(params, x):
+    h = jax.nn.relu(x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# -- VGG11*-style CNN (reduced filters, no BN/dropout -- paper Sec. VI) -------
+
+_VGG_FILTERS = (32, 64, 128, 128)   # reduced VGG11* column for 32x32 inputs
+
+
+def cnn_init(key, in_ch: int = 3, n_classes: int = 10, hidden: int = 128,
+             img: int = 32):
+    ks = jax.random.split(key, len(_VGG_FILTERS) + 2)
+    params = {}
+    ch = in_ch
+    for i, f in enumerate(_VGG_FILTERS):
+        params[f"conv{i}"] = (
+            jax.random.normal(ks[i], (3, 3, ch, f), jnp.float32)
+            * jnp.sqrt(2.0 / (9 * ch)))
+        ch = f
+    spatial = img // (2 ** len(_VGG_FILTERS))
+    flat = ch * spatial * spatial
+    params["fc1"] = dense_init(ks[-2], flat, hidden)
+    params["fc1b"] = jnp.zeros((hidden,), jnp.float32)
+    params["fc2"] = dense_init(ks[-1], hidden, n_classes)
+    params["fc2b"] = jnp.zeros((n_classes,), jnp.float32)
+    return params
+
+
+def cnn_apply(params, x):
+    """x: (B, H, W, C)."""
+    h = x
+    for i in range(len(_VGG_FILTERS)):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"] + params["fc1b"])
+    return h @ params["fc2"] + params["fc2b"]
+
+
+# -- 2-layer LSTM (paper: rows of the image as a 28-step sequence) ------------
+
+def lstm_init(key, d_in: int = 28, d_hidden: int = 128, n_layers: int = 2,
+              n_classes: int = 10):
+    params = {"layers": []}
+    k = key
+    d = d_in
+    for _ in range(n_layers):
+        k, k1, k2 = jax.random.split(k, 3)
+        params["layers"].append({
+            "wx": dense_init(k1, d, 4 * d_hidden),
+            "wh": dense_init(k2, d_hidden, 4 * d_hidden),
+            "b": jnp.zeros((4 * d_hidden,), jnp.float32),
+        })
+        d = d_hidden
+    k, k1 = jax.random.split(k)
+    params["out"] = dense_init(k1, d_hidden, n_classes)
+    params["out_b"] = jnp.zeros((n_classes,), jnp.float32)
+    return params
+
+
+def _lstm_layer(lp, xs):
+    """xs: (T, B, d) -> (T, B, h)."""
+    h_dim = lp["wh"].shape[0]
+    b = xs.shape[1]
+
+    def step(carry, x):
+        h, c = carry
+        gates = x @ lp["wx"] + h @ lp["wh"] + lp["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((b, h_dim)), jnp.zeros((b, h_dim)))
+    _, hs = jax.lax.scan(step, init, xs)
+    return hs
+
+
+def lstm_apply(params, x):
+    """x: (B, T, d) image rows as sequence -> logits (B, n_classes)."""
+    xs = x.reshape(x.shape[0], 28, -1).transpose(1, 0, 2)
+    for lp in params["layers"]:
+        xs = _lstm_layer(lp, xs)
+    return xs[-1] @ params["out"] + params["out_b"]
+
+
+MODEL_ZOO = {
+    "logreg": (logreg_init, logreg_apply),
+    "mlp": (mlp_init_model, mlp_apply_model),
+    "cnn": (cnn_init, cnn_apply),
+    "lstm": (lstm_init, lstm_apply),
+}

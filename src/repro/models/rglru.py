@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_a x_t)                       (recurrence gate)
+    i_t = σ(W_x x_t)                       (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)      (diagonal recurrence, 0<a<1)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The temporal-mixing block is conv1d(4) → RG-LRU → out-proj.  Training uses
+``jax.lax.associative_scan`` over the (a, b) pairs (the diagonal linear
+recurrence composes associatively: (a2,b2)∘(a1,b1) = (a1·a2, a2·b1+b2)),
+which parallelizes to O(log T) depth on TPU.  Decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import RGLRUConfig
+from .layers import dense_init
+
+__all__ = ["RGLRUCache", "rglru_init", "rglru_apply", "rglru_decode",
+           "init_rglru_cache"]
+
+
+class RGLRUCache(NamedTuple):
+    h: jnp.ndarray       # (B, w) recurrent state
+    conv: jnp.ndarray    # (B, k-1, w) conv history
+    idx: jnp.ndarray
+
+
+def _width(d_model: int, cfg: RGLRUConfig) -> int:
+    return cfg.block_width or d_model
+
+
+def rglru_init(key, d_model: int, cfg: RGLRUConfig):
+    w = _width(d_model, cfg)
+    ks = jax.random.split(key, 5)
+    # Λ init so that a^c ∈ (0.9, 0.999) at r=1 (paper's init range)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, w).astype(jnp.float32)) / cfg.c))
+    return {
+        "w_in": dense_init(ks[0], d_model, w),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, w), jnp.float32) * 0.1,
+        "w_a": dense_init(ks[2], w, w),
+        "w_x": dense_init(ks[3], w, w),
+        "lam": lam,
+        "w_out": dense_init(ks[4], w, d_model),
+    }
+
+
+def _gates(params, x, cfg: RGLRUConfig):
+    """x: (..., w) -> (a, b) of the recurrence h' = a·h + b."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"])
+    log_a = -cfg.c * jax.nn.softplus(params["lam"])[..., :] * r
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1-a^2) computed stably from log_a
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * xf)
+    return a, b
+
+
+def _conv(x, conv_w, tail=None):
+    k = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + conv_w[i].astype(x.dtype) * xp[:, i : i + x.shape[1]]
+    return out
+
+
+def rglru_apply(params, x: jnp.ndarray, cfg: RGLRUConfig, d_model: int):
+    """Temporal-mixing block over a full sequence. x: (B,S,d) -> (B,S,d)."""
+    u = x @ params["w_in"].astype(x.dtype)           # (B,S,w)
+    u = _conv(u, params["conv_w"])
+    a, b = _gates(params, u, cfg)                    # (B,S,w) fp32
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype) @ params["w_out"].astype(x.dtype)
+
+
+def init_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig,
+                     dtype=jnp.float32):
+    w = _width(d_model, cfg)
+    return RGLRUCache(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, w), dtype),
+        idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def rglru_decode(params, x: jnp.ndarray, cache: RGLRUCache, cfg: RGLRUConfig,
+                 d_model: int):
+    """One-token decode. x: (B,1,d)."""
+    u = x @ params["w_in"].astype(x.dtype)           # (B,1,w)
+    hist = jnp.concatenate([cache.conv.astype(x.dtype), u], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(x.dtype))
+    new_conv = hist[:, 1:, :]
+    a, b = _gates(params, conv_out[:, None, :], cfg)
+    h_new = a[:, 0] * cache.h + b[:, 0]
+    out = h_new.astype(x.dtype)[:, None, :] @ params["w_out"].astype(x.dtype)
+    return out, RGLRUCache(h=h_new, conv=new_conv, idx=cache.idx + 1)

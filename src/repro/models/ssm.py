@@ -1,0 +1,216 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks of length L; within a
+chunk the output is the masked "attention-like" quadratic term (MXU-friendly),
+across chunks a small recurrence over per-chunk states (h: (heads, p, n))
+propagates history.  This is the TPU-native adaptation: the chunk matmuls map
+to the MXU and the cross-chunk scan is O(T/L) sequential steps.
+
+Decode is the O(1) recurrence  h' = exp(dt·A)·h + dt·B⊗x;  y = C·h + D·x.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import SSMConfig
+from .layers import dense_init
+
+__all__ = ["SSMCache", "ssd_init", "ssd_apply", "ssd_decode", "init_ssm_cache"]
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, p, n) recurrent state
+    conv: jnp.ndarray       # (B, d_conv-1, d_conv_channels) conv tail
+    idx: jnp.ndarray
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    d_conv_ch = d_in + 2 * cfg.n_groups * cfg.d_state
+    return d_in, n_heads, d_conv_ch
+
+
+def ssd_init(key, d_model: int, cfg: SSMConfig):
+    d_in, n_heads, d_conv_ch = _dims(d_model, cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * cfg.n_groups * cfg.d_state + n_heads  # z,x,B,C,dt
+    return {
+        "w_in": dense_init(ks[0], d_model, d_proj),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, d_conv_ch), jnp.float32) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[2], d_in, d_model),
+    }
+
+
+def _split_proj(proj, d_in, n_groups, d_state, n_heads):
+    zs = d_in
+    xs = d_in
+    bs = n_groups * d_state
+    cs = n_groups * d_state
+    z, xbc_dt = jnp.split(proj, [zs], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [xs + bs + cs], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_tail=None):
+    """Depthwise causal conv over (B,S,C). conv_tail: (B, k-1, C) history."""
+    k = conv_w.shape[0]
+    if conv_tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                     # (B, S+k-1, C)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + conv_w[i].astype(xbc.dtype) * xp[:, i : i + xbc.shape[1]]
+    return jax.nn.silu(out)
+
+
+def _segsum(x):
+    """log-space cumulative segment sums: out[i,j] = sum_{j<l<=i} x[l]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD. xh: (B,S,H,p); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G,n).
+
+    Returns (y (B,S,H,p), final_state (B,H,p,n)).
+    """
+    b, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, s)
+    nc = s // L
+    assert s % L == 0, f"seq {s} must be divisible by chunk {L}"
+    rep = h // g
+
+    # reshape to chunks
+    xc = xh.reshape(b, nc, L, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, L, g, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, L, g, n).astype(jnp.float32)
+    Bc = jnp.repeat(Bc, rep, axis=3)                             # (b,nc,L,h,n)
+    Cc = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * (-jnp.exp(A.astype(jnp.float32)))[None, None, None, :]  # (b,nc,L,h) <= 0
+
+    # 1) intra-chunk (diagonal) term: masked quadratic attention analogue
+    seg = _segsum(dA.transpose(0, 1, 3, 2))                      # (b,nc,h,L,L)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)            # (b,nc,h,L,L)
+    y_diag = jnp.einsum("bchls,bcsh,bcshp->bclhp",
+                        scores * decay, dtc, xc)
+
+    # 2) per-chunk states: h_c = sum_l decay_to_end[l] * dt_l * B_l ⊗ x_l
+    dA_cum = jnp.cumsum(dA, axis=2)                              # (b,nc,L,h)
+    decay_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)           # (b,nc,L,h)
+    states = jnp.einsum("bclh,bclh,bclhn,bclhp->bchpn",
+                        decay_end, dtc, Bc, xc)                  # (b,nc,h,p,n)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                   # (b,nc,h)
+
+    def step(hprev, inp):
+        st, dec = inp                                            # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev                                       # emit state BEFORE chunk
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    states_t = states.transpose(1, 0, 2, 3, 4)                   # (nc,b,h,p,n)
+    decay_t = chunk_decay.transpose(1, 0, 2)                     # (nc,b,h)
+    h_final, h_in = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                         # (b,nc,h,p,n)
+
+    # 4) off-diagonal term: contribution of the incoming state to each position
+    state_decay = jnp.exp(dA_cum)                                # decay from chunk start
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp", Cc, state_decay, h_in)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_apply(params, x: jnp.ndarray, cfg: SSMConfig, d_model: int):
+    """Full Mamba-2 mixer block (no separate MLP). x: (B,S,d) -> (B,S,d)."""
+    b, s, _ = x.shape
+    d_in, n_heads, _ = _dims(d_model, cfg)
+    g, n = cfg.n_groups, cfg.d_state
+
+    proj = x @ params["w_in"].astype(x.dtype)
+    z, xbc, dt = _split_proj(proj, d_in, g, n, n_heads)
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xi, Bm, Cm = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+
+    xh = xi.reshape(b, s, n_heads, cfg.head_dim)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+    y, _ = ssd_scan(xh, dt, params["A_log"], Bm, Cm, cfg.chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) *
+         params["norm_g"]).astype(x.dtype)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_in, n_heads, d_conv_ch = _dims(d_model, cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, d_conv_ch), dtype),
+        idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def ssd_decode(params, x: jnp.ndarray, cache: SSMCache, cfg: SSMConfig,
+               d_model: int):
+    """One-token decode. x: (B,1,d). O(1) state update."""
+    b = x.shape[0]
+    d_in, n_heads, d_conv_ch = _dims(d_model, cfg)
+    g, n = cfg.n_groups, cfg.d_state
+
+    proj = x @ params["w_in"].astype(x.dtype)
+    z, xbc, dt = _split_proj(proj, d_in, g, n, n_heads)
+
+    # conv with cached tail
+    hist = jnp.concatenate([cache.conv.astype(x.dtype), xbc], axis=1)  # (B,k,C)
+    k = params["conv_w"].shape[0]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(x.dtype))
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xi, Bm, Cm = jnp.split(xbc1, [d_in, d_in + g * n], axis=-1)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    xh = xi.reshape(b, n_heads, cfg.head_dim).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(b, g, n), n_heads // g, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(b, g, n), n_heads // g, axis=1).astype(jnp.float32)
+
+    dA = jnp.exp(dt1 * (-jnp.exp(params["A_log"].astype(jnp.float32)))[None, :])
+    new_state = (cache.state * dA[..., None, None] +
+                 jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bm, xh))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, new_state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) *
+         params["norm_g"]).astype(x.dtype)
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, SSMCache(state=new_state, conv=new_conv, idx=cache.idx + 1)

@@ -1,0 +1,311 @@
+"""TransformerLM: composes attention / MLA / MoE / SSD / RG-LRU blocks from a
+ModelConfig into a trainable LM, an encoder-decoder (whisper), or a VLM
+(prefix patch embeddings).  Pure functional: params are nested dicts.
+
+Public entry points
+    init_model(cfg, key)                  -> params
+    forward(params, cfg, tokens, ...)     -> (logits, aux_loss)
+    lm_loss(params, cfg, tokens, labels)  -> scalar (chunked LM head optional)
+    init_cache(cfg, batch, s_cache)       -> per-layer cache list
+    decode_step(params, cfg, token, caches, ...) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mla, moe, rglru, ssm
+from .config import ModelConfig
+from .layers import embed_init, mlp_apply, mlp_init, rms_norm, rms_norm_init
+
+__all__ = ["init_model", "forward", "lm_loss", "init_cache", "decode_step",
+           "encode_frames"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, kind: str, key, layer_idx: int):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    block: dict[str, Any] = {"norm1": rms_norm_init(d)}
+    if kind in ("attn", "local"):
+        block["mix"] = attention.attn_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd, bias=cfg.attn_bias)
+    elif kind == "mla":
+        block["mix"] = mla.mla_init(ks[0], d, cfg.n_heads, cfg.mla)
+    elif kind == "ssd":
+        block["mix"] = ssm.ssd_init(ks[0], d, cfg.ssm)
+    elif kind == "rglru":
+        block["mix"] = rglru.rglru_init(ks[0], d, cfg.rglru)
+    else:
+        raise ValueError(kind)
+
+    if kind != "ssd":  # mamba2 blocks have no separate MLP
+        block["norm2"] = rms_norm_init(d)
+        if cfg.moe is not None and layer_idx >= cfg.moe.first_dense:
+            block["moe"] = moe.moe_init(ks[1], d, cfg.moe, cfg.mlp_act)
+        else:
+            block["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act)
+
+    if cfg.encoder is not None:  # decoder layers get cross-attention
+        block["norm_x"] = rms_norm_init(d)
+        block["cross"] = attention.attn_init(ks[2], d, cfg.n_heads,
+                                             cfg.n_heads, hd)
+    return block
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 5)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "blocks": [
+            _init_block(cfg, cfg.layer_kind(i), ks[1 + i], i)
+            for i in range(cfg.n_layers)
+        ],
+        "final_norm": rms_norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[-1], cfg.vocab_size, cfg.d_model)
+    if cfg.encoder is not None:
+        eks = jax.random.split(ks[-2], cfg.encoder.n_layers + 1)
+        params["encoder"] = {
+            "blocks": [
+                {
+                    "norm1": rms_norm_init(cfg.d_model),
+                    "mix": attention.attn_init(eks[i], cfg.d_model,
+                                               cfg.n_heads, cfg.n_heads,
+                                               cfg.resolved_head_dim),
+                    "norm2": rms_norm_init(cfg.d_model),
+                    "mlp": mlp_init(jax.random.fold_in(eks[i], 7),
+                                    cfg.d_model, cfg.d_ff, cfg.mlp_act),
+                }
+                for i in range(cfg.encoder.n_layers)
+            ],
+            "final_norm": rms_norm_init(cfg.d_model),
+        }
+    if cfg.n_prefix_tokens:
+        params["prefix_proj"] = embed_init(ks[-3], cfg.d_model, cfg.d_model).T
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(block, cfg: ModelConfig, kind: str, x,
+                 memory: Optional[jnp.ndarray], chunk: int):
+    h = rms_norm(block["norm1"], x, cfg.norm_eps)
+    window = cfg.sliding_window if kind == "local" else (
+        cfg.sliding_window if (kind == "attn" and cfg.sliding_window and
+                               len(cfg.block_pattern) == 1) else 0)
+    if kind in ("attn", "local"):
+        mix = attention.attn_apply(
+            block["mix"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            causal=True, window=window, chunk=chunk)
+    elif kind == "mla":
+        mix = mla.mla_apply(block["mix"], h, n_heads=cfg.n_heads, cfg=cfg.mla,
+                            rope_theta=cfg.rope_theta, chunk=chunk,
+                            window=cfg.sliding_window)
+    elif kind == "ssd":
+        mix = ssm.ssd_apply(block["mix"], h, cfg.ssm, cfg.d_model)
+    elif kind == "rglru":
+        mix = rglru.rglru_apply(block["mix"], h, cfg.rglru, cfg.d_model)
+    x = x + mix
+
+    if memory is not None and "cross" in block:
+        hx = rms_norm(block["norm_x"], x, cfg.norm_eps)
+        x = x + attention.attn_apply(
+            block["cross"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+            head_dim=cfg.resolved_head_dim, memory=memory, chunk=chunk)
+
+    aux = jnp.zeros((), jnp.float32)
+    if kind != "ssd":
+        h2 = rms_norm(block["norm2"], x, cfg.norm_eps)
+        if "moe" in block:
+            out, aux = moe.moe_apply(block["moe"], h2, cfg.moe, cfg.mlp_act)
+            x = x + out
+        else:
+            x = x + mlp_apply(
+                jax.tree.map(lambda w: w.astype(x.dtype), block["mlp"]),
+                h2, cfg.mlp_act)
+    return x, aux
+
+
+def encode_frames(params, cfg: ModelConfig, frames: jnp.ndarray,
+                  chunk: int = 1024) -> jnp.ndarray:
+    """Run the (whisper) encoder over stub frame embeddings (B, F, d)."""
+    x = frames
+    for block in params["encoder"]["blocks"]:
+        h = rms_norm(block["norm1"], x, cfg.norm_eps)
+        x = x + attention.attn_apply(
+            block["mix"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+            head_dim=cfg.resolved_head_dim, causal=False, chunk=chunk)
+        h2 = rms_norm(block["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(
+            jax.tree.map(lambda w: w.astype(x.dtype), block["mlp"]),
+            h2, cfg.mlp_act)
+    return rms_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            prefix: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            compute_dtype=jnp.bfloat16, chunk: int = 1024,
+            return_hidden: bool = False):
+    """tokens: (B, S) int32.  prefix: (B, P, d) VLM patch embeddings.
+    frames: (B, F, d) audio frame embeddings (enc-dec).  Returns
+    (logits (B, S_total, V), aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if prefix is not None:
+        pfx = (prefix.astype(compute_dtype) @
+               params["prefix_proj"].astype(compute_dtype))
+        x = jnp.concatenate([pfx, x], axis=1)
+
+    memory = None
+    if frames is not None:
+        memory = encode_frames(params, cfg, frames.astype(compute_dtype), chunk)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, block in enumerate(params["blocks"]):
+        kind = cfg.layer_kind(i)
+        fn = functools.partial(_block_apply, cfg=cfg, kind=kind, chunk=chunk)
+        if cfg.remat:
+            fn = jax.checkpoint(lambda b, xx, mm, fn=fn: fn(b, x=xx, memory=mm))
+            x, aux = fn(block, x, memory)
+        else:
+            x, aux = fn(block, x=x, memory=memory)
+        aux_total = aux_total + aux
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    head = params.get("lm_head", params["embed"])
+    logits = x @ head.T.astype(compute_dtype)
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, *, prefix=None, frames=None,
+            compute_dtype=jnp.bfloat16, chunk: int = 1024) -> jnp.ndarray:
+    """Causal LM cross-entropy (mean over tokens) + MoE aux loss.
+
+    With ``cfg.logit_chunk > 0`` the LM head + softmax run in sequence chunks
+    (never materializing the full (B,S,V) logits) -- the memory-term lever for
+    the big-vocab archs.
+    """
+    hidden, aux = forward(params, cfg, tokens, prefix=prefix, frames=frames,
+                          compute_dtype=compute_dtype, chunk=chunk,
+                          return_hidden=True)
+    if prefix is not None:
+        hidden = hidden[:, prefix.shape[1]:, :]      # loss only on text tokens
+    head = params.get("lm_head", params["embed"]).T.astype(compute_dtype)
+
+    def ce(h_chunk, y_chunk):
+        logits = (h_chunk @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_chunk[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    b, s, _ = hidden.shape
+    if cfg.logit_chunk and s > cfg.logit_chunk and s % cfg.logit_chunk == 0:
+        nc = s // cfg.logit_chunk
+        hc = hidden.reshape(b, nc, cfg.logit_chunk, -1).transpose(1, 0, 2, 3)
+        yc = labels.reshape(b, nc, cfg.logit_chunk).transpose(1, 0, 2)
+
+        def body(tot, xy):
+            h, y = xy
+            return tot + ce(h, y), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, yc))
+    else:
+        total = ce(hidden, labels)
+    return total / (b * s) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_cache: int,
+               dtype=jnp.bfloat16) -> list:
+    """Per-layer cache list. 'local' layers get a ring buffer of the window;
+    full-attn layers get s_cache slots (sliding_window>0 on a pure-attn config
+    turns ALL layers into ring buffers -- the long_500k dense variant)."""
+    caches = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind in ("attn", "local"):
+            use_window = (kind == "local") or (
+                cfg.sliding_window and len(cfg.block_pattern) == 1)
+            size = min(cfg.sliding_window, s_cache) if use_window and cfg.sliding_window else s_cache
+            caches.append(attention.init_kv_cache(
+                batch, size, cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+                ring=bool(use_window and cfg.sliding_window and size < s_cache)))
+        elif kind == "mla":
+            caches.append(mla.init_mla_cache(batch, s_cache, cfg.mla, dtype))
+        elif kind == "ssd":
+            caches.append(ssm.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype))
+        elif kind == "rglru":
+            caches.append(rglru.init_rglru_cache(batch, cfg.d_model, cfg.rglru,
+                                                 dtype))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jnp.ndarray, caches: list, *,
+                memory: Optional[jnp.ndarray] = None,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B, 1) int32 -> (logits (B,1,V), new caches)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+    new_caches = []
+    for i, block in enumerate(params["blocks"]):
+        kind = cfg.layer_kind(i)
+        h = rms_norm(block["norm1"], x, cfg.norm_eps)
+        if kind in ("attn", "local"):
+            mix, c = attention.attn_decode(
+                block["mix"], h, caches[i], n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta)
+        elif kind == "mla":
+            mix, c = mla.mla_decode(block["mix"], h, caches[i],
+                                    n_heads=cfg.n_heads, cfg=cfg.mla,
+                                    rope_theta=cfg.rope_theta)
+        elif kind == "ssd":
+            mix, c = ssm.ssd_decode(block["mix"], h, caches[i], cfg.ssm,
+                                    cfg.d_model)
+        elif kind == "rglru":
+            mix, c = rglru.rglru_decode(block["mix"], h, caches[i], cfg.rglru,
+                                        cfg.d_model)
+        x = x + mix
+        new_caches.append(c)
+
+        if memory is not None and "cross" in block:
+            hx = rms_norm(block["norm_x"], x, cfg.norm_eps)
+            out, _ = attention.attn_decode(
+                block["cross"], hx, caches[i], n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim,
+                memory=memory)
+            x = x + out
+
+        if kind != "ssd":
+            h2 = rms_norm(block["norm2"], x, cfg.norm_eps)
+            if "moe" in block:
+                out, _ = moe.moe_apply(block["moe"], h2, cfg.moe, cfg.mlp_act)
+                x = x + out
+            else:
+                x = x + mlp_apply(
+                    jax.tree.map(lambda w: w.astype(x.dtype), block["mlp"]),
+                    h2, cfg.mlp_act)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    return x @ head.T.astype(compute_dtype), new_caches

@@ -1,0 +1,12 @@
+"""Optimizers (no optax in this container): momentum SGD + AdamW + schedules.
+
+Functional interface:
+    state = init(params)
+    new_params, new_state = apply(params, grads, state, lr)
+"""
+
+from .sgd import adamw_apply, adamw_init, sgd_apply, sgd_init
+from .schedules import constant_lr, cosine_lr, warmup_cosine_lr
+
+__all__ = ["sgd_init", "sgd_apply", "adamw_init", "adamw_apply",
+           "constant_lr", "cosine_lr", "warmup_cosine_lr"]

@@ -1,0 +1,52 @@
+"""SGD with momentum (the paper's client optimizer) and AdamW."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd_init", "sgd_apply", "adamw_init", "adamw_apply"]
+
+
+def sgd_init(params):
+    """Momentum buffers, fp32, like params."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd_apply(params, grads, state, lr, momentum: float = 0.9):
+    """Classical (heavy-ball) momentum:  v' = m·v + g;  p' = p - lr·v'."""
+    new_v = jax.tree.map(
+        lambda v, g: momentum * v + g.astype(jnp.float32), state, grads)
+    new_p = jax.tree.map(
+        lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+        params, new_v)
+    return new_p, new_v
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_apply(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}

@@ -1,0 +1,173 @@
+"""PartitionSpec rules: parameter trees, activation constraints, KV caches.
+
+Model axis ("model") carries tensor parallelism: attention heads, FFN hidden,
+expert hidden, vocab.  Client/batch axes ("pod", "data") carry the federated
+clients (train) or the request batch (serve).  GSPMD pads non-divisible dims
+(e.g. phi3's 40 heads on a 16-way model axis), so the rules below never need
+divisibility.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.attention import KVCache
+from repro.models.mla import MLACache
+from repro.models.rglru import RGLRUCache
+from repro.models.ssm import SSMCache
+
+__all__ = ["param_specs", "param_shardings", "cache_specs", "batch_spec",
+           "tree_shardings"]
+
+# §Perf lever: how decode caches shard over the "model" axis.
+#   "heads" (baseline): shard the KV-head dim -- GSPMD pads non-divisible
+#                       head counts (e.g. qwen2's kv=2 -> 16), wasting HBM.
+#   "hd":               shard head_dim (always 64/128/256 -> divides 16).
+CACHE_SHARD_MODE = "heads"
+
+
+def _leaf_spec(path: tuple, leaf) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = keys[-1] if keys else None
+    ndim = leaf.ndim
+
+    # --- embeddings / head: vocab sharded ---------------------------------
+    if name in ("embed", "lm_head"):
+        return P("model", None)
+    if name == "prefix_proj":
+        return P(None, "model")
+
+    # --- MoE stacked experts ----------------------------------------------
+    if name in ("w_gate", "w_up") and ndim == 3:   # (E, d, f)
+        return P(None, None, "model")
+    if name == "w_down" and ndim == 3:             # (E, f, d)
+        return P(None, "model", None)
+    if name == "router":
+        return P(None, None)
+
+    # --- attention / MLA ----------------------------------------------------
+    if name in ("wq", "wk", "wv", "w_uk", "w_uv"):
+        return P(None, "model")
+    if name == "wo":
+        return P("model", None)
+    if name in ("bq", "bk", "bv"):
+        return P("model")
+    if name in ("w_dkv", "w_kr"):                  # small latent projections
+        return P(None, None)
+
+    # --- dense MLP ----------------------------------------------------------
+    if name in ("w_gate", "w_up"):                 # (d, f)
+        return P(None, "model")
+    if name == "w_down":                           # (f, d)
+        return P("model", None)
+
+    # --- SSD / RG-LRU --------------------------------------------------------
+    if name == "w_in":                             # (d, d_proj)
+        return P(None, "model")
+    if name == "w_out":                            # (d_in, d)
+        return P("model", None)
+    if name == "conv_w":                           # (k, channels)
+        return P(None, "model")
+    if name in ("w_a", "w_x"):                     # (w, w) RG-LRU gates
+        return P(None, "model")
+    if name in ("A_log", "D", "dt_bias", "lam", "norm_g"):
+        return P(None)
+
+    # --- norms, biases, scalars: replicated ----------------------------------
+    return P(*([None] * ndim))
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharded axes that do not divide the dimension size.
+
+    jax 0.8 rejects input shardings whose tiling does not evenly divide the
+    array (e.g. whisper's 51865 vocab over a 16-way model axis, or a 2-KV-head
+    cache).  A production system would pad such dims; here the rule falls back
+    to replication for that dim (recorded in DESIGN.md §Changed assumptions).
+    """
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        factor = 1
+        for n in names:
+            factor *= mesh.shape[n]
+        out.append(entry if shape[i] % factor == 0 else None)
+    return P(*out)
+
+
+def param_specs(params) -> Any:
+    """Tree of PartitionSpecs matching the parameter tree."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params)
+
+
+def param_shardings(params, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda p, s: NamedSharding(mesh, fit_spec(s, p.shape, mesh)),
+        params, param_specs(params))
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Batch dim over the client axes; falls back to fewer axes when the
+    batch is too small to shard (long_500k has batch 1)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    used = []
+    for a in axes:
+        size *= mesh.shape[a]
+        used.append(a)
+    if global_batch % size == 0:
+        return P(tuple(used))
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def _cache_leaf_spec(cache, field: str, dp) -> P:
+    if isinstance(cache, KVCache):
+        if CACHE_SHARD_MODE == "hd":
+            return {"k": P(dp, None, None, "model"),
+                    "v": P(dp, None, None, "model")}.get(field, P())
+        return {"k": P(dp, None, "model", None),
+                "v": P(dp, None, "model", None)}.get(field, P())
+    if isinstance(cache, MLACache):
+        return {"c_kv": P(dp, None, None),
+                "k_rope": P(dp, None, None)}.get(field, P())
+    if isinstance(cache, SSMCache):
+        return {"state": P(dp, "model", None, None),
+                "conv": P(dp, None, "model")}.get(field, P())
+    if isinstance(cache, RGLRUCache):
+        return {"h": P(dp, "model"),
+                "conv": P(dp, None, "model")}.get(field, P())
+    raise TypeError(type(cache))
+
+
+def cache_specs(caches: list, mesh: Mesh, global_batch: int) -> list:
+    """Per-layer cache PartitionSpec trees (same structure as the caches)."""
+    dp = batch_spec(mesh, global_batch)
+    dp_axis = dp if dp != P(None) else None
+    dp_name = None
+    if len(dp) and dp[0] is not None:
+        dp_name = dp[0]
+    out = []
+    for c in caches:
+        fields = c._fields
+        out.append(type(c)(*[
+            _cache_leaf_spec(c, f, dp_name) if getattr(c, f) is not None
+            and hasattr(getattr(c, f), "ndim") and getattr(c, f).ndim > 0
+            else P()
+            for f in fields
+        ]))
+    return out
+
+
+def tree_shardings(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

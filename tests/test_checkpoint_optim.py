@@ -1,0 +1,65 @@
+"""Checkpoint roundtrip + optimizer behavior."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.optim import (adamw_apply, adamw_init, constant_lr, cosine_lr,
+                         sgd_apply, sgd_init, warmup_cosine_lr)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {
+            "w": jnp.asarray(np.random.randn(8, 4), jnp.float32),
+            "b16": jnp.asarray(np.random.randn(6), jnp.bfloat16),
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": [jnp.ones((2, 2)), {"x": jnp.zeros(3)}],
+        }
+        path = str(tmp_path / "ck.msgpack.zst")
+        save_checkpoint(path, tree)
+        back = restore_checkpoint(path, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        path = str(tmp_path / "ck.zst")
+        save_checkpoint(path, {"a": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(path, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+class TestOptim:
+    def test_sgd_momentum_accumulates(self):
+        p = {"w": jnp.zeros(3)}
+        g = {"w": jnp.ones(3)}
+        v = sgd_init(p)
+        p1, v1 = sgd_apply(p, g, v, lr=1.0, momentum=0.9)
+        p2, v2 = sgd_apply(p1, g, v1, lr=1.0, momentum=0.9)
+        np.testing.assert_allclose(np.asarray(v2["w"]), 1.9)   # 0.9*1 + 1
+        np.testing.assert_allclose(np.asarray(p2["w"]), -2.9)  # -(1 + 1.9)
+
+    def test_adamw_step(self):
+        p = {"w": jnp.ones(4)}
+        g = {"w": jnp.full(4, 0.5)}
+        st = adamw_init(p)
+        p1, st1 = adamw_apply(p, g, st, lr=0.1)
+        assert float(p1["w"][0]) < 1.0
+        assert int(st1["t"]) == 1
+
+    def test_schedules(self):
+        assert float(constant_lr(0.1)(1000)) == pytest.approx(0.1)
+        c = cosine_lr(1.0, 100)
+        assert float(c(0)) == pytest.approx(1.0)
+        assert float(c(100)) == pytest.approx(0.1, abs=1e-6)
+        w = warmup_cosine_lr(1.0, warmup=10, total_steps=100)
+        assert float(w(0)) == 0.0
+        assert float(w(10)) == pytest.approx(1.0)

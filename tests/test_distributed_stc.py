@@ -1,0 +1,79 @@
+"""Tree-level STC (core.distributed) vs the flat oracle, + environment split."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import stc_compress, flatten_pytree
+from repro.core.distributed import stc_compress_tree, tree_numel
+from repro.fed.environment import FedEnvironment, split_data, volume_fractions
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.standard_normal((37, 13)), jnp.float32),
+        "b": [jnp.asarray(rng.standard_normal(211), jnp.float32),
+              jnp.asarray(rng.standard_normal((5, 7, 11)), jnp.float32)],
+    }
+
+
+class TestTreeSTC:
+    @pytest.mark.parametrize("p", [0.005, 0.02, 0.1])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_flat_oracle(self, p, seed):
+        tree = _tree(seed)
+        tern_tree, stats = stc_compress_tree(tree, p)
+        vec, spec = flatten_pytree(tree)
+        tern_flat, fstats = stc_compress(vec, p)
+        got, _ = flatten_pytree(tern_tree)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(tern_flat),
+                                   atol=2e-5)
+        assert int(stats.nnz) == int(fstats.nnz)
+        np.testing.assert_allclose(float(stats.mu), float(fstats.mu),
+                                   rtol=1e-4)
+
+    def test_numel(self):
+        tree = _tree()
+        assert tree_numel(tree) == 37 * 13 + 211 + 5 * 7 * 11
+
+    def test_global_competition(self):
+        """Leaves with tiny values must lose to leaves with big values."""
+        tree = {"small": jnp.full((100,), 1e-4),
+                "big": jnp.linspace(1.0, 2.0, 100)}
+        tern, stats = stc_compress_tree(tree, 0.1)  # k = 20
+        assert float(jnp.sum(jnp.abs(tern["small"]))) == 0.0
+        assert int(jnp.sum(tern["big"] != 0)) >= 20
+
+
+class TestEnvironment:
+    def test_volume_fractions_sum(self):
+        phi = volume_fractions(50, 0.9)
+        assert phi.sum() == pytest.approx(1.0)
+        assert phi.min() > 0
+
+    def test_split_classes_per_client(self):
+        labels = np.repeat(np.arange(10), 500)
+        env = FedEnvironment(n_clients=20, classes_per_client=2)
+        splits = split_data(labels, env, seed=0)
+        for s in splits:
+            assert len(set(labels[s])) <= 2
+            assert len(s) > 0
+
+    def test_split_disjoint(self):
+        labels = np.repeat(np.arange(10), 300)
+        env = FedEnvironment(n_clients=10, classes_per_client=5)
+        splits = split_data(labels, env, seed=1)
+        all_idx = np.concatenate(splits)
+        assert len(all_idx) == len(set(all_idx))  # non-overlapping
+
+    def test_unbalanced_split_sizes(self):
+        labels = np.repeat(np.arange(10), 1000)
+        env = FedEnvironment(n_clients=20, classes_per_client=10,
+                             balancedness=0.9)
+        splits = split_data(labels, env, seed=2)
+        sizes = np.array([len(s) for s in splits])
+        assert sizes[0] > sizes[-1]  # γ<1 concentrates data on early clients

@@ -1,0 +1,74 @@
+"""Federated integration: the paper's qualitative claims on synthetic data.
+
+These are small, CPU-sized versions of the claims validated at full scale in
+benchmarks/ (EXPERIMENTS.md §Paper-claims):
+  * STC trains through non-iid splits where signSGD degrades,
+  * error feedback makes STC strictly better than compression-free rounds
+    would suggest (bits ledger sanity),
+  * ternarization is harmless vs pure top-k at matched sparsity.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import make_protocol
+from repro.data import make_classification
+from repro.fed import FedEnvironment, FederatedTrainer, TrainerConfig
+from repro.models.paper_models import MODEL_ZOO
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=8000, n_test=1500)
+
+
+def _run(proto, data, rounds, n_clients=10, cpc=2, lr=0.04, momentum=0.0,
+         participation=1.0, seed=0):
+    train, test = data
+    env = FedEnvironment(n_clients=n_clients, participation=participation,
+                         classes_per_client=cpc, batch_size=20)
+    tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env, proto,
+                          TrainerConfig(lr=lr, momentum=momentum, seed=seed))
+    hist = tr.run(rounds, eval_every=rounds)
+    return hist[-1]
+
+
+class TestPaperClaims:
+    def test_stc_noniid_converges(self, data):
+        h = _run(make_protocol("stc", sparsity_up=1 / 50,
+                               sparsity_down=1 / 50), data, rounds=50)
+        assert h["acc"] > 0.85
+
+    def test_stc_beats_signsgd_noniid(self, data):
+        stc = _run(make_protocol("stc", sparsity_up=1 / 50,
+                                 sparsity_down=1 / 50), data, rounds=40)
+        sgn = _run(make_protocol("signsgd"), data, rounds=40)
+        assert stc["acc"] > sgn["acc"] + 0.05
+
+    def test_stc_fewer_bits_than_fedavg(self, data):
+        """Pareto claim: at matched accuracy, STC uploads far fewer bits."""
+        stc = _run(make_protocol("stc", sparsity_up=1 / 50,
+                                 sparsity_down=1 / 50), data, rounds=50)
+        fed = _run(make_protocol("fedavg", local_iters=10), data, rounds=5)
+        assert stc["acc"] >= fed["acc"] - 0.02
+        assert stc["bits_up"] < fed["bits_up"] / 10
+
+    def test_partial_participation(self, data):
+        h = _run(make_protocol("stc", sparsity_up=1 / 50,
+                               sparsity_down=1 / 50), data, rounds=60,
+                 n_clients=20, participation=0.25)
+        assert h["acc"] > 0.75
+
+    def test_bits_ledger_monotone(self, data):
+        train, test = data
+        env = FedEnvironment(n_clients=10, participation=0.5,
+                             classes_per_client=10)
+        tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env,
+                              make_protocol("stc", sparsity_up=1 / 50,
+                                            sparsity_down=1 / 50),
+                              TrainerConfig(lr=0.04))
+        tr.run(6, eval_every=2)
+        ups = [h["bits_up"] for h in tr.history]
+        assert all(b > a for a, b in zip(ups, ups[1:]))
+        # caching: downstream cost >= one update per participant per round
+        assert tr.bits_down > 0

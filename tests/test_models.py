@@ -1,0 +1,253 @@
+"""Model-layer correctness: chunked attention vs dense reference, SSD vs
+naive recurrence, RG-LRU vs sequential loop, and whole-model prefill/decode
+consistency for every block family."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (decode_step, encode_frames, forward, init_cache,
+                          init_model)
+from repro.models.attention import chunked_attention
+from repro.models.config import (EncoderConfig, MLAConfig, ModelConfig,
+                                 MoEConfig, RGLRUConfig, SSMConfig)
+from repro.models.rglru import _gates, rglru_apply, rglru_init
+from repro.models.ssm import ssd_scan
+
+jax.config.update("jax_platform_name", "cpu")
+KEY = jax.random.PRNGKey(0)
+
+
+def _dense_attention(q, k, v, causal, window=0):
+    """O(S^2) reference with GQA."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("sq,skv,h,kv,chunk", [
+        (16, 16, 4, 4, 4), (32, 32, 4, 2, 8), (17, 17, 6, 3, 5),
+        (8, 24, 4, 1, 24),
+    ])
+    def test_vs_dense(self, sq, skv, h, kv, chunk):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, sq, h, 8))
+        k = jax.random.normal(ks[1], (2, skv, kv, 8))
+        v = jax.random.normal(ks[2], (2, skv, kv, 8))
+        causal = sq == skv
+        got = chunked_attention(q, k, v, causal=causal, chunk=chunk)
+        want = _dense_attention(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_sliding_window(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 32, 2, 8))
+        k = jax.random.normal(ks[1], (1, 32, 2, 8))
+        v = jax.random.normal(ks[2], (1, 32, 2, 8))
+        got = chunked_attention(q, k, v, causal=True, window=8, chunk=8)
+        want = _dense_attention(q, k, v, True, window=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_mla_value_dim_differs(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 8, 4, 12))
+        k = jax.random.normal(ks[1], (1, 8, 4, 12))
+        v = jax.random.normal(ks[2], (1, 8, 4, 6))     # hdv != hd
+        out = chunked_attention(q, k, v, causal=True, chunk=4)
+        assert out.shape == (1, 8, 4, 6)
+
+
+class TestSSD:
+    def _naive_ssd(self, xh, dt, A, B, C):
+        """Sequential reference:  h' = exp(dt·A)h + dt·B⊗x;  y = C·h."""
+        b, s, h, p = xh.shape
+        n = B.shape[-1]
+        rep = h // B.shape[2]
+        Bf = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+        Cf = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+        hst = jnp.zeros((b, h, p, n), jnp.float32)
+        ys = []
+        for t in range(s):
+            da = jnp.exp(dt[:, t] * (-jnp.exp(A))[None, :])        # (b,h)
+            hst = (hst * da[..., None, None] +
+                   jnp.einsum("bh,bhn,bhp->bhpn", dt[:, t], Bf[:, t],
+                              xh[:, t].astype(jnp.float32)))
+            ys.append(jnp.einsum("bhn,bhpn->bhp", Cf[:, t], hst))
+        return jnp.stack(ys, axis=1)
+
+    @pytest.mark.parametrize("chunk", [2, 4, 8])
+    def test_chunked_vs_naive(self, chunk):
+        b, s, h, p, n = 2, 16, 4, 8, 4
+        ks = jax.random.split(KEY, 5)
+        xh = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = jax.random.normal(ks[2], (h,)) * 0.5
+        B = jax.random.normal(ks[3], (b, s, 1, n))
+        C = jax.random.normal(ks[4], (b, s, 1, n))
+        y, _ = ssd_scan(xh, dt, A, B, C, chunk)
+        want = self._naive_ssd(xh, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_final_state_continuation(self):
+        """Scanning two halves with carried state == scanning the whole."""
+        b, s, h, p, n = 1, 16, 2, 4, 4
+        ks = jax.random.split(KEY, 5)
+        xh = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = jax.random.normal(ks[2], (h,)) * 0.5
+        B = jax.random.normal(ks[3], (b, s, 1, n))
+        C = jax.random.normal(ks[4], (b, s, 1, n))
+        y_full, st_full = ssd_scan(xh, dt, A, B, C, 4)
+        y1, st1 = ssd_scan(xh[:, :8], dt[:, :8], A, B[:, :8], C[:, :8], 4)
+        y2, st2 = ssd_scan(xh[:, 8:], dt[:, 8:], A, B[:, 8:], C[:, 8:], 4,
+                           init_state=st1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRGLRU:
+    def test_scan_vs_sequential(self):
+        d = 16
+        cfg = RGLRUConfig()
+        params = rglru_init(KEY, d, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d))
+        out = rglru_apply(params, x, cfg, d)
+
+        # sequential reference on the same gates
+        u = x @ params["w_in"]
+        k = params["conv_w"].shape[0]
+        pad = jnp.zeros((2, k - 1, d))
+        xp = jnp.concatenate([pad, u], axis=1)
+        conv = sum(params["conv_w"][i] * xp[:, i : i + 12] for i in range(k))
+        a, bm = _gates(params, conv, cfg)
+        h = jnp.zeros((2, d))
+        hs = []
+        for t in range(12):
+            h = a[:, t] * h + bm[:, t]
+            hs.append(h)
+        want = jnp.stack(hs, 1) @ params["w_out"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# whole-model prefill/decode consistency
+# ---------------------------------------------------------------------------
+
+V = 61
+
+
+def _consistency(cfg, frames=None, prefix=None, steps=6, atol=2e-3):
+    params = init_model(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, steps), 0, V)
+    memory = None
+    fw_kwargs = {}
+    if frames is not None:
+        fw_kwargs["frames"] = frames
+        memory = encode_frames(params, cfg, frames.astype(jnp.float32))
+    if prefix is not None:
+        fw_kwargs["prefix"] = prefix
+    logits_full, _ = forward(params, cfg, toks, compute_dtype=jnp.float32,
+                             **fw_kwargs)
+    if prefix is not None:
+        logits_full = logits_full[:, prefix.shape[1]:]
+    if prefix is not None:
+        pytest.skip("prefix decode offsets covered separately")
+    caches = init_cache(cfg, 2, steps + 2, jnp.float32)
+    for t in range(steps):
+        lg, caches = decode_step(params, cfg, toks[:, t : t + 1], caches,
+                                 memory=memory, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(logits_full[:, t]),
+            rtol=5e-3, atol=atol,
+            err_msg=f"{cfg.name} decode diverges at step {t}")
+
+
+class TestDecodeConsistency:
+    def test_dense_gqa(self):
+        cfg = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V,
+                          attn_bias=True, remat=False)
+        _consistency(cfg)
+
+    def test_mla(self):
+        cfg = ModelConfig(name="m", arch_type="dense", n_layers=2, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=V,
+                          block_pattern=("mla",),
+                          mla=MLAConfig(kv_lora_rank=16, qk_nope_head_dim=8,
+                                        qk_rope_head_dim=4, v_head_dim=8),
+                          remat=False)
+        _consistency(cfg)
+
+    def test_moe(self):
+        cfg = ModelConfig(name="e", arch_type="moe", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V,
+                          moe=MoEConfig(n_experts=4, top_k=2, n_shared=1,
+                                        d_expert=16), remat=False)
+        _consistency(cfg)
+
+    def test_ssd(self):
+        cfg = ModelConfig(name="s", arch_type="ssm", n_layers=2, d_model=32,
+                          n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=V,
+                          block_pattern=("ssd",),
+                          ssm=SSMConfig(d_state=8, head_dim=8, chunk=2),
+                          remat=False)
+        _consistency(cfg, atol=5e-3)
+
+    def test_hybrid_rglru(self):
+        cfg = ModelConfig(name="h", arch_type="hybrid", n_layers=3,
+                          d_model=32, n_heads=4, n_kv_heads=1, d_ff=64,
+                          vocab_size=V,
+                          block_pattern=("rglru", "rglru", "local"),
+                          sliding_window=4, rglru=RGLRUConfig(), remat=False)
+        _consistency(cfg)
+
+    def test_encdec(self):
+        cfg = ModelConfig(name="w", arch_type="audio", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=V,
+                          mlp_act="gelu",
+                          encoder=EncoderConfig(n_layers=2, n_frames=5),
+                          remat=False)
+        frames = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 32))
+        _consistency(cfg, frames=frames)
+
+    def test_sliding_ring_buffer_matches_full(self):
+        """Ring-buffer decode == full-cache decode inside the window."""
+        base = dict(name="r", arch_type="dense", n_layers=1, d_model=32,
+                    n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=V,
+                    remat=False)
+        cfg_w = ModelConfig(**base, sliding_window=4)
+        params = init_model(cfg_w, KEY)
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 10), 0, V)
+        # windowed forward as reference
+        ref_logits, _ = forward(params, cfg_w, toks, compute_dtype=jnp.float32)
+        caches = init_cache(cfg_w, 1, 10, jnp.float32)  # ring of size 4
+        assert caches[0].k.shape[1] == 4 and caches[0].ring
+        for t in range(10):
+            lg, caches = decode_step(params, cfg_w, toks[:, t : t + 1],
+                                     caches, compute_dtype=jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(lg[:, 0]), np.asarray(ref_logits[:, t]),
+                rtol=5e-3, atol=2e-3, err_msg=f"step {t}")

@@ -1,0 +1,106 @@
+"""Error-feedback residual invariants + Protocol interface behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Protocol, encode_ternary, decode_ternary,
+                        make_protocol, stc_compress)
+from repro.core.residual import compress_with_feedback, init_residual
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(n, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(n) * scale, jnp.float32)
+
+
+class TestErrorFeedback:
+    def test_exact_decomposition(self):
+        """msg + residual' == update + residual  (no mass lost, Eqs. 9/11)."""
+        x = _rand(500, 1)
+        state = init_residual(x)
+        msg, state2, _ = compress_with_feedback(
+            x, state, lambda v: stc_compress(v, 0.02))
+        np.testing.assert_allclose(
+            np.asarray(msg + state2.residual), np.asarray(x), rtol=1e-5)
+
+    def test_telescoping_sum(self):
+        """Over T rounds: Σ msgs + final residual == Σ raw updates."""
+        n, rounds = 300, 20
+        state = init_residual(jnp.zeros(n))
+        total_updates = jnp.zeros(n)
+        total_msgs = jnp.zeros(n)
+        for t in range(rounds):
+            u = _rand(n, seed=t)
+            total_updates += u
+            msg, state, _ = compress_with_feedback(
+                u, state, lambda v: stc_compress(v, 0.05))
+            total_msgs += msg
+        np.testing.assert_allclose(
+            np.asarray(total_msgs + state.residual),
+            np.asarray(total_updates), rtol=1e-4, atol=1e-5)
+
+    def test_residual_eventually_transmits(self):
+        """A large dropped coordinate must eventually be sent (EF liveness)."""
+        n = 100
+        state = init_residual(jnp.zeros(n))
+        spike = jnp.zeros(n).at[7].set(0.5)  # below top-k of the noise at first
+        sent = 0.0
+        for t in range(50):
+            u = _rand(n, seed=100 + t, scale=1.0) * 0.0 + spike
+            msg, state, _ = compress_with_feedback(
+                u, state, lambda v: stc_compress(v, 0.02))
+            sent += float(msg[7])
+        assert sent > 0.5 * 50 * 0.5  # most of the accumulated mass got through
+
+
+class TestProtocols:
+    def test_factory_defaults(self):
+        stc = make_protocol("stc")
+        assert stc.sparsity_up == pytest.approx(1 / 400)
+        assert stc.error_feedback
+        with pytest.raises(ValueError):
+            make_protocol("nope")
+
+    def test_stc_bits_much_smaller(self):
+        n = 865_482  # VGG11* size from the paper
+        stc = make_protocol("stc")
+        fedavg = make_protocol("fedavg")
+        assert stc.upload_bits(n) < fedavg.upload_bits(n) / 500
+        assert stc.download_bits(n) < fedavg.download_bits(n) / 500
+
+    def test_topk_downstream_densifies(self):
+        """Sec. V-A: upload-only top-k downstream grows with participants."""
+        n = 100_000
+        topk = make_protocol("topk", sparsity_up=1 / 100)
+        d1 = topk.download_bits(n, n_participating=1)
+        d200 = topk.download_bits(n, n_participating=200)
+        assert d200 > 50 * d1  # effectively dense downstream
+
+    def test_server_aggregate_stc(self):
+        p = make_protocol("stc", sparsity_up=0.05, sparsity_down=0.05)
+        msgs = jnp.stack([_rand(200, 5), _rand(200, 6)])
+        srv = p.init_server_state(200)
+        out, srv2, stats = p.server_aggregate(msgs, srv)
+        # output is ternary
+        vals = np.unique(np.asarray(out))
+        mu = float(stats.mu)
+        assert all(np.isclose(v, 0) or np.isclose(abs(v), mu, rtol=1e-5)
+                   for v in vals)
+        # residual holds the difference exactly
+        np.testing.assert_allclose(
+            np.asarray(out + srv2.residual),
+            np.asarray(jnp.mean(msgs, axis=0)), rtol=1e-5, atol=1e-6)
+
+    def test_wire_roundtrip_through_codec(self):
+        """client_compress -> Golomb encode -> decode == same message."""
+        p = make_protocol("stc", sparsity_up=0.02, sparsity_down=0.02)
+        st_ = p.init_client_state(400)
+        msg, _, _ = p.client_compress(_rand(400, 9), st_)
+        wire, mu, n = encode_ternary(np.asarray(msg), p.sparsity_up)
+        back = decode_ternary(wire, mu, n, p.sparsity_up)
+        np.testing.assert_allclose(back, np.asarray(msg), rtol=1e-5, atol=1e-7)

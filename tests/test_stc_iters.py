@@ -1,0 +1,17 @@
+"""k-selection bisection accuracy contract (§Perf A3): 12 rounds keep the
+selected count within 1% of k on Gaussian-like updates."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import stc_compress_tree
+
+
+def test_bisection_iteration_accuracy():
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.standard_normal(500_000), jnp.float32)}
+    k = max(int(500_000 / 400), 1)
+    _, st32 = stc_compress_tree(tree, 1 / 400, iters=32)
+    _, st12 = stc_compress_tree(tree, 1 / 400, iters=12)
+    assert int(st32.nnz) == k
+    assert abs(int(st12.nnz) - k) / k < 0.01

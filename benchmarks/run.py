@@ -5,11 +5,38 @@
 Prints ``name,value,derived`` CSV rows.  The fed benchmarks are scaled-down
 (CPU) versions of the paper's experiments on synthetic structured data; the
 ``roofline`` benchmark reads the dry-run artifacts if present.
+
+Whenever the ``kernels`` bench runs, its rows are also written to
+``benchmarks/BENCH_stc.json`` so the STC-compression perf trajectory is
+tracked across PRs (compare the committed file against a fresh run).
 """
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import platform
 import sys
+
+BENCH_STC_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "BENCH_stc.json")
+
+
+def write_bench_stc(rows) -> None:
+    """Persist kernel-bench rows (µs wall-clock) for cross-PR tracking."""
+    payload = {
+        "generated": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+        "unit": "us",
+        "rows": [{"name": name, "us": round(float(val), 1), "note": derived}
+                 for name, val, derived in rows],
+    }
+    with open(BENCH_STC_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
@@ -27,7 +54,9 @@ def main() -> None:
     for name in which:
         print(f"# === {name} ===", flush=True)
         if name == "kernels":
-            rows += kernel_bench.run(verbose=False)
+            krows = kernel_bench.run(verbose=False)
+            write_bench_stc(krows)
+            rows += krows
         elif name == "roofline":
             from benchmarks import roofline
             recs = roofline.load_records()

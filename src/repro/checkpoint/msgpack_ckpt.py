@@ -1,17 +1,30 @@
-"""Msgpack pytree checkpointing with zstd compression."""
+"""Msgpack pytree checkpointing with zstd (or stdlib zlib) compression.
+
+``zstandard`` is an *optional* dependency: when it is missing we fall back to
+stdlib ``zlib``.  The codec is sniffed on restore via the zstd frame magic, so
+checkpoints written with either codec restore correctly whenever the matching
+decompressor is importable.
+"""
 
 from __future__ import annotations
 
 import os
 import tempfile
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: prefer zstd when available (better ratio + speed)
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on minimal images
+    zstandard = None
 
 __all__ = ["save_checkpoint", "restore_checkpoint"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"  # little-endian 0xFD2FB528 frame header
 
 _BF16 = "bfloat16"
 
@@ -38,7 +51,10 @@ def save_checkpoint(path: str, tree) -> None:
         "treedef": str(treedef),  # structural fingerprint for validation
         "leaves": [_pack_leaf(x) for x in leaves],
     })
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    else:
+        comp = zlib.compress(payload, 6)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     # atomic write
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
@@ -55,7 +71,15 @@ def restore_checkpoint(path: str, like):
     """Restore into the structure of ``like`` (validates leaf count +
     treedef fingerprint)."""
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = f.read()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is zstd-compressed but the 'zstandard' package is "
+                "not installed")
+        payload = zstandard.ZstdDecompressor().decompress(raw)
+    else:
+        payload = zlib.decompress(raw)
     obj = msgpack.unpackb(payload)
     leaves, treedef = jax.tree.flatten(like)
     if len(obj["leaves"]) != len(leaves):

@@ -10,8 +10,11 @@ Public API:
 
 from .compression import (
     CompressionStats,
+    StcBackend,
     flatten_pytree,
+    get_stc_backend,
     majority_vote_sign,
+    register_stc_backend,
     sign_compress,
     stc_compress,
     stc_compress_pytree,
@@ -34,7 +37,9 @@ from .residual import ResidualState, compress_with_feedback, init_residual
 from .caching import UpdateCache
 
 __all__ = [
-    "CompressionStats", "flatten_pytree", "majority_vote_sign", "sign_compress",
+    "CompressionStats", "StcBackend", "get_stc_backend",
+    "register_stc_backend", "flatten_pytree", "majority_vote_sign",
+    "sign_compress",
     "stc_compress", "stc_compress_pytree", "ternarize", "top_k_mask",
     "top_k_sparsify", "unflatten_pytree", "decode_ternary", "encode_ternary",
     "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",

@@ -34,6 +34,10 @@ __all__ = [
     "flatten_pytree",
     "unflatten_pytree",
     "stc_compress_pytree",
+    "StcBackend",
+    "register_stc_backend",
+    "get_stc_backend",
+    "STC_BACKENDS",
 ]
 
 
@@ -157,3 +161,75 @@ def stc_compress_pytree(tree, p: float):
     vec, spec = flatten_pytree(tree)
     tern, stats = stc_compress(vec, p)
     return unflatten_pytree(tern, spec), stats
+
+
+# ---------------------------------------------------------------------------
+# Compressor backend registry: the federated loop (and Protocol) pick the STC
+# implementation by name -- "jnp" (lax.top_k operator above) or "kernel" (the
+# Pallas histogram-selection path in repro.kernels).  Both produce oracle-
+# identical (tern, new_residual, stats) so the flag is purely a perf choice.
+# ---------------------------------------------------------------------------
+
+
+class StcBackend(NamedTuple):
+    """STC-with-error-feedback in single and batched (client-axis) forms.
+
+    ``compress_with_residual(delta (n,), residual (n,), p)`` and
+    ``compress_with_residual_batch(deltas (B, n), residuals (B, n), p)`` both
+    return ``(msg, new_residual, CompressionStats)``; the batched form carries
+    a leading client axis on every output.
+    """
+
+    name: str
+    compress_with_residual: object
+    compress_with_residual_batch: object
+
+
+def _jnp_compress_with_residual(delta, residual, p: float):
+    carried = delta.astype(jnp.float32) + residual.astype(jnp.float32)
+    msg, stats = stc_compress(carried, p)
+    return msg, carried - msg, stats
+
+
+def _jnp_compress_with_residual_batch(deltas, residuals, p: float):
+    return jax.vmap(
+        lambda d, r: _jnp_compress_with_residual(d, r, p))(deltas, residuals)
+
+
+STC_BACKENDS: dict[str, StcBackend] = {
+    "jnp": StcBackend("jnp", _jnp_compress_with_residual,
+                      _jnp_compress_with_residual_batch),
+}
+
+
+def register_stc_backend(backend: StcBackend) -> None:
+    STC_BACKENDS[backend.name] = backend
+
+
+def _make_kernel_backend() -> StcBackend:
+    # lazy: keeps core import-light and avoids a hard kernels dependency here
+    from repro.kernels import stc_compress_batch, stc_compress_kernel
+
+    def single(delta, residual, p: float):
+        tern, new_res, mu, _, nnz = stc_compress_kernel(delta, residual, p)
+        stats = CompressionStats(nnz=nnz, numel=jnp.asarray(delta.size), mu=mu)
+        return tern, new_res, stats
+
+    def batch(deltas, residuals, p: float):
+        tern, new_res, mu, _, nnz = stc_compress_batch(deltas, residuals, p)
+        numel = jnp.full(deltas.shape[0], deltas.shape[1])
+        stats = CompressionStats(nnz=nnz, numel=numel, mu=mu)
+        return tern, new_res, stats
+
+    return StcBackend("kernel", single, batch)
+
+
+def get_stc_backend(name: str) -> StcBackend:
+    """Look up a registered STC backend ("jnp" / "kernel") by name."""
+    if name == "kernel" and name not in STC_BACKENDS:
+        register_stc_backend(_make_kernel_backend())
+    if name not in STC_BACKENDS:
+        raise ValueError(
+            f"unknown STC backend {name!r}; options: "
+            f"{sorted(set(STC_BACKENDS) | {'kernel'})}")
+    return STC_BACKENDS[name]

@@ -2,12 +2,21 @@
 
 Global top-k over the whole model == per-leaf masking with ONE global
 magnitude threshold, and µ == the global mean magnitude of kept entries.
-Computing the threshold by bisection over per-leaf counts therefore gives a
-result *identical* to flattening-and-sorting, but touches every leaf in place:
-no concatenation, no resharding, no all-gather of the parameter vector.
+The threshold is found by the same single-pass histogram selection as
+:mod:`repro.kernels.hist_select`, but applied leaf-by-leaf: ONE sweep over
+the leaves accumulates a 256-bin (count, Σ|x|) histogram, a cumulative sum
+locates the k-th bin, and one gather pass over the candidate bin reads the
+exact k-th magnitude — replacing the old 32-iteration bisection fori_loop
+(32 full sweeps over every leaf) with ≤3 sweeps.  The result is *identical*
+to flattening-and-sorting, but touches every leaf in place: no concatenation,
+no resharding, no all-gather of the parameter vector.
+
 Reductions over the tensor-parallel ("model") axis happen automatically via
 GSPMD (jnp.sum of a sharded leaf is a global sum); reductions over manual
-(shard_map) axes are explicit via ``lax.psum`` when ``manual_axes`` is given.
+(shard_map) axes are explicit: the per-bin histogram vectors are ``psum``-ed
+and the (tiny, ≤``cap``) candidate gather is ``all_gather``-ed.  On
+pathological inputs that overflow the candidate capacity the old bisection
+loop runs as an exactness fallback under ``lax.cond``.
 
 This module is the distributed twin of core.compression / kernels.ops, and is
 oracle-checked against them in tests.
@@ -15,11 +24,13 @@ oracle-checked against them in tests.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.selection import (DEFAULT_CAP, NBINS, PASSES, bin_index,
+                                  locate_bin, resolve_interpret)
 
 __all__ = ["TreeStats", "tree_numel", "stc_compress_tree",
            "sign_compress_tree", "tree_add", "tree_scale"]
@@ -53,7 +64,7 @@ def _pmax(x, manual_axes):
 
 
 def _count_and_sum(tree, t):
-    """(#|x|>=t, Σ|x| over that set) across all leaves."""
+    """(#|x|>=t, Σ|x| over that set) across all leaves (one sweep)."""
     cnt = jnp.zeros((), jnp.int32)
     s = jnp.zeros((), jnp.float32)
     for leaf in jax.tree.leaves(tree):
@@ -64,26 +75,62 @@ def _count_and_sum(tree, t):
     return cnt, s
 
 
-def stc_compress_tree(tree, p: float, *, manual_axes=(), iters: int = 32,
-                      numel: int | None = None):
-    """STC over a pytree: returns (ternary_tree, stats).
-
-    ``manual_axes``: shard_map axis names the leaves are *sharded over* (the
-    server stage when state is scattered); () when each caller holds the full
-    (possibly GSPMD-sharded) tree.
-    """
-    numel = numel if numel is not None else tree_numel(tree)
-    if manual_axes:
-        # numel above counts only the local shard -- scale by the axis size
-        # is wrong for uneven shards; callers pass explicit numel instead.
-        pass
-    k = max(int(numel * p), 1)
-
-    a_max = jnp.zeros((), jnp.float32)
+def _tree_histogram(tree, scale, bins):
+    """ONE sweep over the leaves -> per-bin (count, Σ|x|) vectors."""
+    cnt = jnp.zeros((bins,), jnp.int32)
+    s = jnp.zeros((bins,), jnp.float32)
     for leaf in jax.tree.leaves(tree):
-        a_max = jnp.maximum(a_max, jnp.max(jnp.abs(leaf.astype(jnp.float32))))
-    a_max = _pmax(a_max, manual_axes)
+        a = jnp.abs(leaf.astype(jnp.float32)).reshape(-1)
+        idx = bin_index(a, scale, bins)
+        cnt = cnt + jnp.bincount(idx, length=bins).astype(jnp.int32)
+        s = s + jnp.bincount(idx, weights=a, length=bins).astype(jnp.float32)
+    return cnt, s
 
+
+def _direct_tree_select(tree, k, cap, manual_axes):
+    """Non-TPU small-k shortcut: per-leaf top-k gathers, one sweep (1-2 total).
+
+    Every element ≥ the global k-th magnitude is inside its leaf's top-
+    ``min(cap, size)`` gather (there are at most k ≤ cap of them per leaf), so
+    the k-th largest of the concatenated gathers is exact; a per-leaf
+    tie-spill (a full gather whose tail ties the threshold) falls back to one
+    counting sweep via lax.cond.
+    """
+    PASSES.record("topk_gather")                               # sweep 1
+    cands, full = [], []
+    for leaf in jax.tree.leaves(tree):
+        a = jnp.abs(leaf.astype(jnp.float32)).reshape(-1)
+        cap_leaf = min(cap, a.size)
+        cands.append(jax.lax.top_k(a, cap_leaf)[0])
+        full.append(a.size > cap_leaf)
+    # gathered tail == min (descending); NOT c[-1], whose static slice of a
+    # top_k XLA:CPU rewrites into a full sort of the leaf
+    tails = jnp.stack([jnp.min(c) for c in cands])
+    fulls = jnp.asarray(full)
+    cands = jnp.concatenate(cands)
+    if manual_axes:
+        cands = jax.lax.all_gather(cands, manual_axes).reshape(-1)
+        tails = jax.lax.all_gather(tails, manual_axes).reshape(-1)
+        fulls = jax.lax.all_gather(fulls, manual_axes).reshape(-1)
+
+    srt = jnp.sort(cands)[::-1]
+    v = srt[k - 1]
+    spill = jnp.any(fulls & (tails >= v))
+
+    def _from_gather(_):
+        ge = cands >= v
+        return (v, jnp.sum(ge.astype(jnp.int32)),
+                jnp.sum(jnp.where(ge, cands, 0.0)))
+
+    def _tie_spill(_):                                         # rare sweep 2
+        cnt, s = _count_and_sum(tree, v)
+        return v, _psum(cnt, manual_axes), _psum(s, manual_axes)
+
+    return jax.lax.cond(spill, _tie_spill, _from_gather, None)
+
+
+def _bisect_threshold(tree, k, a_max, manual_axes, iters):
+    """Old 32-sweep bisection; kept as the rare-case exactness fallback."""
     hi0 = a_max * jnp.float32(1.0 + 1e-6) + jnp.float32(1e-30)
     lo0 = jnp.float32(0.0)
 
@@ -97,17 +144,83 @@ def stc_compress_tree(tree, p: float, *, manual_axes=(), iters: int = 32,
 
     lo, _ = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
     cnt, s = _count_and_sum(tree, lo)
+    return lo, _psum(cnt, manual_axes), _psum(s, manual_axes)
+
+
+def stc_compress_tree(tree, p: float, *, manual_axes=(), iters: int = 32,
+                      numel: int | None = None, bins: int = NBINS,
+                      cap: int = DEFAULT_CAP):
+    """STC over a pytree: returns (ternary_tree, stats).
+
+    ``manual_axes``: shard_map axis names the leaves are *sharded over* (the
+    server stage when state is scattered); () when each caller holds the full
+    (possibly GSPMD-sharded) tree.  ``iters`` only affects the bisection
+    fallback taken when the candidate histogram bin overflows ``cap``.
+    """
+    numel = numel if numel is not None else tree_numel(tree)
+    if manual_axes:
+        # numel above counts only the local shard -- scale by the axis size
+        # is wrong for uneven shards; callers pass explicit numel instead.
+        pass
+    k = max(int(numel * p), 1)
+
+    if resolve_interpret(None) and k <= cap:
+        # non-TPU small-k shortcut (see _direct_tree_select / hist_select)
+        thresh, cnt_tot, sum_tot = _direct_tree_select(tree, k, cap,
+                                                       manual_axes)
+        return _finish_tree(tree, thresh, cnt_tot, sum_tot, numel)
+
+    PASSES.record("max")                                        # sweep 1
+    a_max = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        a_max = jnp.maximum(a_max, jnp.max(jnp.abs(leaf.astype(jnp.float32))))
+    a_max = _pmax(a_max, manual_axes)
+    scale = jnp.where(a_max > 0, jnp.float32(bins) / a_max, jnp.float32(0.0))
+
+    PASSES.record("histogram")                                  # sweep 2
+    cnt, s = _tree_histogram(tree, scale, bins)
     cnt = _psum(cnt, manual_axes)
     s = _psum(s, manual_axes)
-    mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+    b, cnt_gt, sum_gt, cnt_b = locate_bin(cnt, s, k, bins)
+    r = k - cnt_gt                                              # 1 <= r <= cnt_b
+
+    PASSES.record("refine")                                     # sweep 3
+    cands = []
+    for leaf in jax.tree.leaves(tree):
+        a = jnp.abs(leaf.astype(jnp.float32)).reshape(-1)
+        in_bin = bin_index(a, scale, bins) == b
+        masked = jnp.where(in_bin, a, jnp.float32(-1.0))
+        cands.append(jax.lax.top_k(masked, min(cap, a.size))[0])
+    cands = jnp.concatenate(cands)
+    if manual_axes:
+        cands = jax.lax.all_gather(cands, manual_axes).reshape(-1)
+
+    def _exact(_):
+        srt = jnp.sort(cands)[::-1]              # descending, ≤ L·cap values
+        v = jnp.take(srt, r - 1, mode="clip")
+        ge = (cands >= 0.0) & (cands >= v)
+        return (v, cnt_gt + jnp.sum(ge.astype(jnp.int32)),
+                sum_gt + jnp.sum(jnp.where(ge, cands, 0.0)))
+
+    def _fallback(_):
+        return _bisect_threshold(tree, k, a_max, manual_axes, iters)
+
+    thresh, cnt_tot, sum_tot = jax.lax.cond(cnt_b > cap, _fallback, _exact,
+                                            None)
+    return _finish_tree(tree, thresh, cnt_tot, sum_tot, numel)
+
+
+def _finish_tree(tree, thresh, cnt_tot, sum_tot, numel):
+    """µ + per-leaf ternarization from the selected (thresh, count, sum)."""
+    mu = sum_tot / jnp.maximum(cnt_tot, 1).astype(jnp.float32)
 
     def tern_leaf(x):
         xf = x.astype(jnp.float32)
-        m = jnp.abs(xf) >= lo
+        m = jnp.abs(xf) >= thresh
         return jnp.where(m, mu * jnp.sign(xf), 0.0).astype(x.dtype)
 
     tern = jax.tree.map(tern_leaf, tree)
-    return tern, TreeStats(nnz=cnt, numel=numel, mu=mu, thresh=lo)
+    return tern, TreeStats(nnz=cnt_tot, numel=numel, mu=mu, thresh=thresh)
 
 
 def sign_compress_tree(tree, step: float):

@@ -28,9 +28,9 @@ import jax.numpy as jnp
 from . import golomb
 from .compression import (
     CompressionStats,
+    get_stc_backend,
     majority_vote_sign,
     sign_compress,
-    stc_compress,
     top_k_sparsify,
 )
 from .residual import ResidualState, compress_with_feedback, init_residual
@@ -55,6 +55,7 @@ class Protocol:
     sign_step: Optional[float] = None       # δ (signsgd)
     local_iters: int = 1                    # n (fedavg delay period)
     error_feedback: bool = False
+    backend: str = "jnp"                    # STC impl: "jnp" | "kernel"
 
     # -- state ------------------------------------------------------------
     def init_client_state(self, numel: int) -> Optional[ResidualState]:
@@ -81,9 +82,10 @@ class Protocol:
                 update, state, lambda v: top_k_sparsify(v, self.sparsity_up)
             )
         if self.name == "stc":
-            return compress_with_feedback(
-                update, state, lambda v: stc_compress(v, self.sparsity_up)
-            )
+            be = get_stc_backend(self.backend)
+            msg, new_res, stats = be.compress_with_residual(
+                update, state.residual, self.sparsity_up)
+            return msg, ResidualState(residual=new_res), stats
         raise ValueError(self.name)
 
     # -- server side (aggregation + downstream) -----------------------------
@@ -96,9 +98,10 @@ class Protocol:
             return msg, state, stats
         mean = jnp.mean(stacked, axis=0)
         if self.name == "stc":
-            return compress_with_feedback(
-                mean, state, lambda v: stc_compress(v, self.sparsity_down)
-            )
+            be = get_stc_backend(self.backend)
+            msg, new_res, stats = be.compress_with_residual(
+                mean, state.residual, self.sparsity_down)
+            return msg, ResidualState(residual=new_res), stats
         msg, stats = _identity(mean)
         return msg, state, stats
 

@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.core import golomb
 from repro.core.caching import UpdateCache
-from repro.core.compression import (flatten_pytree, majority_vote_sign,
-                                    sign_compress, stc_compress,
+from repro.core.compression import (flatten_pytree, get_stc_backend,
+                                    majority_vote_sign, sign_compress,
                                     top_k_sparsify, unflatten_pytree)
 from repro.core.protocols import Protocol
 from repro.data.synthetic import Dataset
@@ -90,11 +90,21 @@ class FederatedTrainer:
         lr = self.tcfg.lr
         mom = self.tcfg.momentum
         spec = self.spec
+        # momentum stays an fp32 pytree inside the scan (no per-step
+        # flatten/unflatten round-trip); it is flattened once per round to
+        # slot back into the stacked (n_clients, numel) state.
+        treedef, shapes = spec
+        spec_f32 = (treedef, [(shape, jnp.float32) for shape, _ in shapes])
         apply_fn = self.apply_fn
+        # compressor registry: the protocol's backend flag picks the STC
+        # implementation ("jnp" operator vs Pallas histogram kernels).
+        stc_backend = get_stc_backend(proto.backend) \
+            if proto.name == "stc" else None
 
         def local_update(params_vec, mom_vec, xs, ys):
             """One client: ``local_iters`` SGD steps. xs: (n, b, ...)."""
             params = unflatten_pytree(params_vec, spec)
+            mom_tree = unflatten_pytree(mom_vec, spec_f32)
 
             def loss(p, x, y):
                 return _cross_entropy(apply_fn(p, x), y)
@@ -103,44 +113,53 @@ class FederatedTrainer:
                 p, v = carry
                 x, y = batch
                 g = jax.grad(loss)(p, x, y)
-                gv, _ = flatten_pytree(g)
-                v = mom * v + gv
-                p = unflatten_pytree(flatten_pytree(p)[0] - lr * v, spec)
+                v = jax.tree.map(
+                    lambda vi, gi: mom * vi + gi.astype(jnp.float32), v, g)
+                # update math in fp32, round once per step at the cast back
+                p = jax.tree.map(
+                    lambda pi, vi: (pi.astype(jnp.float32) - lr * vi)
+                    .astype(pi.dtype), p, v)
                 return (p, v), None
 
-            (p_final, v_final), _ = jax.lax.scan(step, (params, mom_vec),
+            (p_final, v_final), _ = jax.lax.scan(step, (params, mom_tree),
                                                  (xs, ys))
             delta = flatten_pytree(p_final)[0] - params_vec
-            return delta, v_final
+            return delta, flatten_pytree(v_final)[0]
 
-        def client_compress(delta, res):
+        def compress_clients(deltas, res_sel):
+            """Upstream compression of the whole (P, numel) round at once."""
             if proto.name in ("baseline", "fedavg"):
-                return delta, res
+                return deltas, res_sel
             if proto.name == "signsgd":
-                msg, _ = sign_compress(delta, proto.sign_step)
-                return msg, res
-            carried = delta + res
+                msgs = jax.vmap(
+                    lambda d: sign_compress(d, proto.sign_step)[0])(deltas)
+                return msgs, res_sel
             if proto.name == "topk":
-                msg, _ = top_k_sparsify(carried, proto.sparsity_up)
-            else:
-                msg, _ = stc_compress(carried, proto.sparsity_up)
-            return msg, carried - msg
+                carried = deltas + res_sel
+                msgs = jax.vmap(
+                    lambda c: top_k_sparsify(c, proto.sparsity_up)[0])(carried)
+                return msgs, carried - msgs
+            # stc: one batched backend call (a single kernel launch per stage
+            # on the "kernel" backend) instead of a vmap of selections
+            msgs, new_res, _ = stc_backend.compress_with_residual_batch(
+                deltas, res_sel, proto.sparsity_up)
+            return msgs, new_res
 
         def round_fn(params_vec, server_res, mom_sel, res_sel, xs, ys):
             """xs: (P, iters, b, ...); ys: (P, iters, b)."""
             deltas, new_mom = jax.vmap(
                 lambda m, x, y: local_update(params_vec, m, x, y)
             )(mom_sel, xs, ys)
-            msgs, new_res = jax.vmap(client_compress)(deltas, res_sel)
+            msgs, new_res = compress_clients(deltas, res_sel)
 
             if proto.name == "signsgd":
                 global_delta = majority_vote_sign(msgs, proto.sign_step)
             else:
                 mean = jnp.mean(msgs, axis=0)
                 if proto.name == "stc":
-                    carried = mean + server_res
-                    global_delta, _ = stc_compress(carried, proto.sparsity_down)
-                    server_res = carried - global_delta
+                    global_delta, server_res, _ = \
+                        stc_backend.compress_with_residual(
+                            mean, server_res, proto.sparsity_down)
                 else:
                     global_delta = mean
             new_params = params_vec + global_delta

@@ -1,0 +1,58 @@
+"""Shared helpers for the STC Pallas kernels.
+
+The pure-jnp selection building blocks (``bin_index``, ``locate_bin``,
+``resolve_interpret``, the ``PASSES`` streaming-pass counter) live in
+:mod:`repro.core.selection` so core modules never depend on pallas; they are
+re-exported here for the kernels.  This module adds the kernel-only pieces:
+
+* ``resolve_block_rows`` -- ``block_rows=None`` resolves to VMEM-sized blocks
+  on TPU and to large blocks under the interpreter, whose per-grid-step
+  overhead dominates off-TPU.
+* ``pad_2d`` / ``pad_3d`` -- zero-pad flat / (clients, n) inputs into
+  ``(…, M, LANE)`` tiles with ``M % block_rows == 0``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.selection import (PASSES, PassCounter,  # noqa: F401
+                                  resolve_interpret)
+
+__all__ = ["LANE", "DEFAULT_BLOCK_ROWS", "INTERPRET_BLOCK_ROWS",
+           "resolve_interpret", "resolve_block_rows", "pad_2d", "pad_3d",
+           "PASSES", "PassCounter"]
+
+LANE = 128                 # TPU lane width; last dim of every block
+DEFAULT_BLOCK_ROWS = 512   # 512*128 fp32 = 256 KiB per input block in VMEM
+INTERPRET_BLOCK_ROWS = 2048  # interpreter: fewer, larger grid steps (no VMEM)
+
+
+def resolve_block_rows(block_rows: int | None, interpret: bool) -> int:
+    """``None`` -> VMEM-sized blocks on TPU, big blocks under the interpreter
+    (whose per-grid-step overhead dominates off-TPU)."""
+    if block_rows is not None:
+        return block_rows
+    return INTERPRET_BLOCK_ROWS if interpret else DEFAULT_BLOCK_ROWS
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_2d(x_flat: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Zero-pad a flat fp32 vector and reshape to (M, LANE), M % block_rows == 0."""
+    n = x_flat.size
+    per_block = block_rows * LANE
+    padded = _cdiv(n, per_block) * per_block
+    x = jnp.pad(x_flat, (0, padded - n))
+    return x.reshape(-1, LANE)
+
+
+def pad_3d(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """(B, n) fp32 -> zero-padded (B, M, LANE) with M % block_rows == 0."""
+    bsz, n = x.shape
+    per_block = block_rows * LANE
+    padded = _cdiv(n, per_block) * per_block
+    x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, padded - n)))
+    return x.reshape(bsz, -1, LANE)

@@ -3,12 +3,20 @@
 ``stc_compress_kernel(delta, residual, p)`` is the drop-in kernel-backed
 equivalent of ``core.residual.compress_with_feedback(·, ·, stc_compress)``:
 
-    1. k-selection by threshold bisection   (topk_threshold kernel, ~32 passes)
-    2. µ = sum|carried above t| / count     (reuses the final stats pass)
-    3. fused ternarize + error-feedback     (stc_compress kernel, 1 pass)
+    1. k-selection by single-pass histogram  (hist_select kernel, ≤3 passes;
+       ``selector="bisect"`` keeps the old 33-pass bisection for comparison)
+    2. µ = sum|carried above t| / count      (assembled from the histogram
+       partials + refinement gather — no extra stats pass)
+    3. fused ternarize + error-feedback      (stc_compress kernel, 1 pass,
+       reading the already-materialized carried vector once)
 
-On CPU the kernels run in ``interpret=True`` mode (the default here); on TPU
-pass ``interpret=False``.  ``ref.py`` holds the pure-jnp oracles.
+``stc_compress_batch`` compresses a whole federated round's (P, n) client
+updates in ONE batched histogram launch + ONE batched apply launch (grid
+``(client, block)``) instead of a vmap of per-client selections.
+
+``interpret=None`` autodetects the backend: the kernels run compiled on TPU
+and in interpreter mode everywhere else.  ``ref.py`` holds the pure-jnp
+oracles.
 """
 
 from __future__ import annotations
@@ -19,28 +27,53 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .stc_compress import stc_apply
-from .topk_threshold import DEFAULT_BLOCK_ROWS, threshold_stats, topk_threshold
+from ._util import PASSES
+from .hist_select import (DEFAULT_CAP, hist_topk_threshold,
+                          hist_topk_threshold_batched, magnitude_histogram,
+                          magnitude_histogram_batched)
+from .stc_compress import stc_apply, stc_apply_batched
+from .topk_threshold import threshold_stats, topk_threshold
 
 __all__ = [
     "stc_compress_kernel",
+    "stc_compress_batch",
     "stc_compress_ref",
     "threshold_stats",
     "topk_threshold",
+    "hist_topk_threshold",
+    "hist_topk_threshold_batched",
+    "magnitude_histogram",
+    "magnitude_histogram_batched",
+    "PASSES",
 ]
 
 
+def _select(carried, k, selector, iters, block_rows, interpret, cap):
+    if selector == "hist":
+        return hist_topk_threshold(
+            carried, k, cap=cap, block_rows=block_rows, interpret=interpret)
+    if selector == "bisect":
+        return topk_threshold(
+            carried, k, iters=iters, block_rows=block_rows,
+            interpret=interpret)
+    raise ValueError(f"unknown selector {selector!r}")
+
+
 @functools.partial(
-    jax.jit, static_argnames=("p", "iters", "block_rows", "interpret")
+    jax.jit,
+    static_argnames=("p", "selector", "iters", "block_rows", "interpret",
+                     "cap"),
 )
 def stc_compress_kernel(
     delta: jnp.ndarray,
     residual: jnp.ndarray,
     p: float,
     *,
+    selector: str = "hist",
     iters: int = 32,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    cap: int = DEFAULT_CAP,
 ):
     """Kernel-backed STC with error feedback over flat fp32 vectors.
 
@@ -49,12 +82,43 @@ def stc_compress_kernel(
     n = delta.size
     k = max(int(n * p), 1)
     carried = delta.astype(jnp.float32) + residual.astype(jnp.float32)
-    thresh, cnt, s = topk_threshold(
-        carried, k, iters=iters, block_rows=block_rows, interpret=interpret
-    )
+    thresh, cnt, s = _select(carried, k, selector, iters, block_rows,
+                             interpret, cap)
     mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
     tern, new_res = stc_apply(
-        delta, residual, thresh, mu, block_rows=block_rows, interpret=interpret
+        carried, thresh, mu, block_rows=block_rows, interpret=interpret
+    )
+    return tern, new_res, mu, thresh, cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "block_rows", "interpret", "cap"),
+)
+def stc_compress_batch(
+    deltas: jnp.ndarray,
+    residuals: jnp.ndarray,
+    p: float,
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    cap: int = DEFAULT_CAP,
+):
+    """Batched kernel-backed STC over (clients, n) updates + residuals.
+
+    One histogram launch + one fused-apply launch for the whole batch.
+    Returns ``(tern, new_residual, mu, thresh, nnz)`` with leading client
+    axis ((B, n) arrays, (B,) stats).
+    """
+    assert deltas.shape == residuals.shape and deltas.ndim == 2
+    _, n = deltas.shape
+    k = max(int(n * p), 1)
+    carried = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
+    thresh, cnt, s = hist_topk_threshold_batched(
+        carried, k, cap=cap, block_rows=block_rows, interpret=interpret)
+    mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+    tern, new_res = stc_apply_batched(
+        carried, thresh, mu, block_rows=block_rows, interpret=interpret
     )
     return tern, new_res, mu, thresh, cnt
 
@@ -62,13 +126,12 @@ def stc_compress_kernel(
 @functools.partial(jax.jit, static_argnames=("p", "iters"))
 def stc_compress_ref(delta: jnp.ndarray, residual: jnp.ndarray, p: float,
                      *, iters: int = 32):
-    """Pure-jnp oracle with identical signature/semantics to the kernel path."""
+    """Pure-jnp bisection oracle with the kernel path's signature/semantics."""
     n = delta.size
     k = max(int(n * p), 1)
     carried = delta.astype(jnp.float32) + residual.astype(jnp.float32)
     thresh = ref.topk_threshold_ref(carried, k, iters=iters)
     cnt, s = ref.threshold_stats_ref(carried, thresh)
     mu = s / jnp.maximum(cnt, 1).astype(jnp.float32)
-    tern, new_res = ref.stc_fused_ref(delta.astype(jnp.float32),
-                                      residual.astype(jnp.float32), thresh, mu)
+    tern, new_res = ref.stc_apply_ref(carried, thresh, mu)
     return tern, new_res, mu, thresh, cnt

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 __all__ = [
     "threshold_stats_ref",
     "topk_threshold_ref",
+    "magnitude_histogram_ref",
+    "stc_apply_ref",
     "stc_fused_ref",
 ]
 
@@ -48,6 +50,33 @@ def topk_threshold_ref(x: jnp.ndarray, k: int, iters: int = 32):
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     # lo is the largest bracketed threshold with count >= k
     return lo
+
+
+def magnitude_histogram_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                            bins: int = 256):
+    """Per-bin (count, Σ|x|) with the linear binning of ``hist_select``.
+
+    Must use the *identical* bin expression as the kernel so masks agree
+    bit-for-bit: ``bin = clip(int(|x| * scale), 0, bins - 1)``.
+    """
+    a = jnp.abs(x.astype(jnp.float32))
+    idx = jnp.clip((a * scale).astype(jnp.int32), 0, bins - 1)
+    cnt = jnp.bincount(idx, length=bins).astype(jnp.int32)
+    sums = jnp.bincount(idx, weights=a, length=bins).astype(jnp.float32)
+    return cnt, sums
+
+
+def stc_apply_ref(carried: jnp.ndarray, thresh: jnp.ndarray, mu: jnp.ndarray):
+    """Fused STC apply on the carried vector ``delta + residual``:
+
+        tern         = µ * sign(carried) * (|carried| >= thresh)
+        new_residual = carried - tern
+
+    carried flat fp32; thresh/mu scalars.  Returns (tern, new_residual).
+    """
+    mask = jnp.abs(carried) >= thresh
+    tern = jnp.where(mask, mu * jnp.sign(carried), 0.0)
+    return tern.astype(carried.dtype), (carried - tern).astype(carried.dtype)
 
 
 def stc_fused_ref(delta: jnp.ndarray, residual: jnp.ndarray, thresh: jnp.ndarray,

@@ -1,17 +1,22 @@
-"""Pallas TPU kernel: fused STC apply (residual-add → mask → ternarize → EF).
+"""Pallas TPU kernel: fused STC apply (mask → ternarize → error-feedback).
 
 Naively, one STC round over the flat parameter vector does
 
-    carried = ΔW + A          (read 2n, write n)
     mask    = |carried| >= t  (read n)
     tern    = µ·sign·mask     (read n, write n)
-    A'      = carried - tern  (read 2n, write n)
+    A'      = carried - tern  (read n, write n)
 
-≈ 9n fp32 HBM moves.  This kernel fuses everything into ONE pass: read
-(ΔW, A) once, write (T*, A') once — 4n moves, a 2.25× cut on the dominant
-memory term of the compression step.  Inputs are tiled to (block_rows, 128)
-VMEM blocks; the threshold t and magnitude µ are scalar (1,1) operands
-computed by the bisection kernel in :mod:`.topk_threshold`.
+This kernel fuses everything into ONE pass: read ``carried`` once, write
+``(T*, A')`` once — 3n fp32 HBM moves.  The caller threads the carried vector
+``ΔW + A`` (already materialized by the k-selection step) straight through, so
+the delta/residual pair is never re-read and the add never recomputed.
+Inputs are tiled to (block_rows, 128) VMEM blocks; the threshold t and
+magnitude µ are scalar (1, 1) operands computed by the histogram selector in
+:mod:`.hist_select` (or the bisection fallback in :mod:`.topk_threshold`).
+
+``stc_apply_batched`` adds a leading client axis: grid ``(client, block)``
+with per-client (t, µ) scalars, so compressing P participants is ONE kernel
+launch instead of a vmap of P launches.
 """
 
 from __future__ import annotations
@@ -22,73 +27,90 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .topk_threshold import LANE, DEFAULT_BLOCK_ROWS, _pad_2d
+from ._util import (LANE, PASSES, pad_3d, resolve_block_rows,
+                    resolve_interpret)
 
-__all__ = ["stc_apply"]
+__all__ = ["stc_apply", "stc_apply_batched"]
 
 
-def _fused_kernel(d_ref, r_ref, t_ref, mu_ref, tern_ref, res_ref,
-                  *, block_rows: int, n: int):
-    i = pl.program_id(0)
-    d = d_ref[...].astype(jnp.float32)
-    r = r_ref[...]
+def stc_apply(
+    carried: jnp.ndarray,
+    thresh: jnp.ndarray,
+    mu: jnp.ndarray,
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused  tern = µ·sign(carried)·[|carried| >= t];  A' = carried - tern.
+
+    carried: flat fp32 vector (= ΔW + A); thresh/mu scalars.
+    Returns ``(tern, new_residual)`` flat fp32 vectors of the input length.
+    Thin wrapper over the batched kernel with a client axis of 1.
+    """
+    tern, res = stc_apply_batched(
+        carried.reshape(1, -1), thresh.reshape(1), mu.reshape(1),
+        block_rows=block_rows, interpret=interpret)
+    return tern[0], res[0]
+
+
+def _fused_kernel(c_ref, t_ref, mu_ref, tern_ref, res_ref,
+                          *, block_rows: int, n: int):
+    i = pl.program_id(1)                     # block index within the client
+    carried = c_ref[0].astype(jnp.float32)   # (block_rows, LANE)
     t = t_ref[0, 0]
     mu = mu_ref[0, 0]
 
-    carried = d + r
-
-    row = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0)
-    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, carried.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, carried.shape, 1)
     gidx = (i * block_rows + row) * LANE + col
     valid = gidx < n
 
     m = (jnp.abs(carried) >= t) & valid
     tern = jnp.where(m, mu * jnp.sign(carried), jnp.zeros_like(carried))
-    tern_ref[...] = tern
-    res_ref[...] = carried - tern
+    tern_ref[0] = tern
+    res_ref[0] = carried - tern
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def stc_apply(
-    delta: jnp.ndarray,
-    residual: jnp.ndarray,
+def stc_apply_batched(
+    carried: jnp.ndarray,
     thresh: jnp.ndarray,
     mu: jnp.ndarray,
     *,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
 ):
-    """Fused  tern = µ·sign(Δ+A)·[|Δ+A| >= t];  A' = (Δ+A) - tern.
+    """Batched fused apply over a (clients, n) carried matrix.
 
-    delta/residual: flat fp32 vectors of equal length; thresh/mu scalars.
-    Returns ``(tern, new_residual)`` flat fp32 vectors of the input length.
+    carried: (B, n) fp32; thresh/mu: (B,) per-client scalars.
+    Returns ``(tern, new_residual)`` of shape (B, n).
     """
-    assert delta.shape == residual.shape, (delta.shape, residual.shape)
-    n = delta.size
-    d2 = _pad_2d(delta.astype(jnp.float32), block_rows)
-    r2 = _pad_2d(residual.astype(jnp.float32), block_rows)
-    grid = (d2.shape[0] // block_rows,)
-    t2 = thresh.reshape(1, 1).astype(jnp.float32)
-    mu2 = mu.reshape(1, 1).astype(jnp.float32)
+    interpret = resolve_interpret(interpret)
+    block_rows = resolve_block_rows(block_rows, interpret)
+    PASSES.record("stc_apply")
+    b, n = carried.shape
+    c3 = pad_3d(carried, block_rows)
+    grid = (b, c3.shape[1] // block_rows)
+    t2 = thresh.reshape(b, 1).astype(jnp.float32)
+    mu2 = mu.reshape(b, 1).astype(jnp.float32)
 
-    kernel = functools.partial(_fused_kernel, block_rows=block_rows, n=n)
+    kernel = functools.partial(_fused_kernel, block_rows=block_rows,
+                               n=n)
     tern, res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_rows, LANE), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_rows, LANE), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, block_rows, LANE), lambda c, i: (c, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct(d2.shape, jnp.float32),
-            jax.ShapeDtypeStruct(d2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(c3.shape, jnp.float32),
+            jax.ShapeDtypeStruct(c3.shape, jnp.float32),
         ],
         interpret=interpret,
-    )(d2, r2, t2, mu2)
-    return tern.reshape(-1)[:n], res.reshape(-1)[:n]
+    )(c3, t2, mu2)
+    return tern.reshape(b, -1)[:, :n], res.reshape(b, -1)[:, :n]

@@ -7,6 +7,11 @@ each bisection round is one streaming pass that counts elements with
 ``|x| >= t`` (and sums their magnitudes, which the final round reuses as the
 ternary µ numerator).
 
+NOTE: bisection costs ``iters + 1`` (default 33) full streaming passes over
+HBM per selection.  It is kept as (a) the reference selector and (b) the
+rare-case fallback of the single-pass histogram selector in
+:mod:`.hist_select`, which replaces it on the hot path (≤3 passes).
+
 The kernel tiles the (padded, reshaped to (M, 128)) input into VMEM blocks of
 ``(block_rows, 128)`` and accumulates scalar partials across the sequential
 TPU grid into a (1, 1) output block (same output block for every grid step —
@@ -21,10 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["threshold_stats", "LANE", "DEFAULT_BLOCK_ROWS"]
+from ._util import (DEFAULT_BLOCK_ROWS, LANE, PASSES, pad_2d,
+                    resolve_block_rows, resolve_interpret)
 
-LANE = 128                 # TPU lane width; last dim of every block
-DEFAULT_BLOCK_ROWS = 512   # 512*128 fp32 = 256 KiB per input block in VMEM
+__all__ = ["threshold_stats", "topk_threshold", "LANE", "DEFAULT_BLOCK_ROWS"]
+
+# back-compat alias: older call sites import the padder from this module
+_pad_2d = pad_2d
 
 
 def _stats_kernel(x_ref, t_ref, cnt_ref, sum_ref, *, block_rows: int, n: int):
@@ -52,31 +60,22 @@ def _stats_kernel(x_ref, t_ref, cnt_ref, sum_ref, *, block_rows: int, n: int):
     sum_ref[0, 0] += s
 
 
-def _pad_2d(x_flat: jnp.ndarray, block_rows: int) -> jnp.ndarray:
-    """Zero-pad a flat fp32 vector and reshape to (M, LANE), M % block_rows == 0."""
-    n = x_flat.size
-    per_block = block_rows * LANE
-    padded = pl.cdiv(n, per_block) * per_block
-    x = jnp.pad(x_flat, (0, padded - n))
-    return x.reshape(-1, LANE)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("block_rows", "interpret")
-)
 def threshold_stats(
     x_flat: jnp.ndarray,
     thresh: jnp.ndarray,
     *,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
 ):
     """(count, sum|x|) over entries of ``x_flat`` with ``|x| >= thresh``.
 
     x_flat: flat fp32 vector (any length); thresh: scalar fp32.
     """
+    interpret = resolve_interpret(interpret)
+    block_rows = resolve_block_rows(block_rows, interpret)
+    PASSES.record("threshold_stats")
     n = x_flat.size
-    x2 = _pad_2d(x_flat.astype(jnp.float32), block_rows)
+    x2 = pad_2d(x_flat.astype(jnp.float32), block_rows)
     m_rows = x2.shape[0]
     grid = (m_rows // block_rows,)
     t2 = thresh.reshape(1, 1).astype(jnp.float32)
@@ -107,14 +106,18 @@ def topk_threshold(
     k: int,
     *,
     iters: int = 32,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
 ):
-    """Bisection k-selection driving the stats kernel.
+    """Bisection k-selection driving the stats kernel (``iters + 1`` passes).
 
     Returns ``(thresh, count, sum_abs)`` where ``count = #{|x| >= thresh} >= k``
     and ``sum_abs`` is the magnitude mass above the threshold (the µ numerator).
     """
+    interpret = resolve_interpret(interpret)
+    # fori_loop traces the body once; record the logical pass count explicitly
+    # (iters bisection rounds; the final stats call records itself).
+    PASSES.record("bisect_round", iters - 1)
     a_max = jnp.max(jnp.abs(x_flat)).astype(jnp.float32)
     hi0 = a_max * jnp.float32(1.0 + 1e-6) + jnp.float32(1e-30)
     lo0 = jnp.float32(0.0)
@@ -129,5 +132,6 @@ def topk_threshold(
         return jnp.where(keep, mid, lo), jnp.where(keep, hi, mid)
 
     lo, _ = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
-    cnt, s = threshold_stats(x_flat, lo, block_rows=block_rows, interpret=interpret)
+    cnt, s = threshold_stats(x_flat, lo, block_rows=block_rows,
+                             interpret=interpret)
     return lo, cnt, s

@@ -11,7 +11,11 @@ Defined as functions so importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.4.38; older versions have no axis types (everything is Auto)
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_debug_mesh"]
 
@@ -19,6 +23,8 @@ __all__ = ["make_production_mesh", "make_debug_mesh"]
 def _mesh(shape, axes):
     # Auto axis types: GSPMD propagates the "model" axis; shard_map takes the
     # client axes manual.  (Explicit pinning is left to a future jax.)
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 

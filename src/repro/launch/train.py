@@ -270,9 +270,16 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
             specs_out["momentum"] = P(ca)
         # NOTE: partial-manual shard_map must run through jit (the eager impl
         # path mishandles check_vma=False with auto axes in jax 0.8).
-        f = jax.shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
-                          out_specs=(specs_out, P()),
-                          axis_names=set(ca), check_vma=False)
+        if hasattr(jax, "shard_map"):
+            f = jax.shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
+                              out_specs=(specs_out, P()),
+                              axis_names=set(ca), check_vma=False)
+        else:  # jax <= 0.4.x spelling: manual axes via the auto-complement
+            from jax.experimental.shard_map import shard_map
+            auto = frozenset(mesh.axis_names) - set(ca)
+            f = shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
+                          out_specs=(specs_out, P()), check_rep=False,
+                          auto=auto)
         return f(state, batch)
 
     return jax.jit(wrapped)

@@ -1,0 +1,62 @@
+"""Minimal deterministic stand-in for ``hypothesis`` on images without it.
+
+Implements just the surface the test-suite uses (``given``, ``settings``,
+``strategies.integers/floats``): each ``@given`` test runs over a fixed number
+of seeded pseudo-random examples instead of hypothesis' adaptive search.  The
+real package is preferred whenever importable (see the try/except at the test
+modules' import sites).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+_MAX_EXAMPLES = [25]
+
+
+def settings(*, max_examples: int = 25, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        n_default = getattr(fn, "_stub_max_examples", _MAX_EXAMPLES[0])
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", n_default)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[: -len(strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

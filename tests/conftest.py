@@ -1,0 +1,3 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess / multi-device)")

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal deterministic fallback (see the stub)
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.compression import (flatten_pytree, majority_vote_sign,
                                     sign_compress, stc_compress,

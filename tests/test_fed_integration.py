@@ -33,6 +33,29 @@ def _run(proto, data, rounds, n_clients=10, cpc=2, lr=0.04, momentum=0.0,
     return hist[-1]
 
 
+class TestCompressorBackends:
+    def test_kernel_backend_matches_jnp(self, data):
+        """The Pallas histogram backend must be a drop-in for the jnp operator
+        in the round function: the trained parameter vectors themselves must
+        agree (the bit ledger is analytic and cannot distinguish backends)."""
+        import numpy as np
+        from repro.fed import FederatedTrainer
+        train, test = data
+        env = FedEnvironment(n_clients=10, participation=0.5,
+                             classes_per_client=2, batch_size=20)
+        params = {}
+        for be in ("jnp", "kernel"):
+            proto = make_protocol("stc", sparsity_up=1 / 50,
+                                  sparsity_down=1 / 50, backend=be)
+            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env,
+                                  proto, TrainerConfig(lr=0.04, momentum=0.9,
+                                                       seed=0))
+            tr.run(8, eval_every=8)
+            params[be] = np.asarray(tr.params_vec)
+        np.testing.assert_allclose(params["kernel"], params["jnp"],
+                                   rtol=1e-4, atol=1e-5)
+
+
 class TestPaperClaims:
     def test_stc_noniid_converges(self, data):
         h = _run(make_protocol("stc", sparsity_up=1 / 50,

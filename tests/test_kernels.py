@@ -15,6 +15,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 SHAPES = [64, 1000, 4096, 8192, 65536, 100_003]   # incl. non-aligned sizes
 DTYPES = [jnp.float32, jnp.bfloat16]
+SELECTORS = ["hist", "bisect"]
 
 
 def _rand(n, seed=0, dtype=jnp.float32):
@@ -67,11 +68,13 @@ class TestFusedSTC:
         assert int(ck) == int(cr)
 
     @pytest.mark.parametrize("n", [1000, 8192])
-    def test_kernel_vs_core_operator(self, n):
+    @pytest.mark.parametrize("selector", SELECTORS)
+    def test_kernel_vs_core_operator(self, n, selector):
         """Kernel path == core.stc_compress on carried = delta + residual."""
         d = _rand(n, 3)
         r = _rand(n, 4) * 0.05
-        tk, rk, muk, _, ck = stc_compress_kernel(d, r, 0.02, block_rows=64)
+        tk, rk, muk, _, ck = stc_compress_kernel(d, r, 0.02, block_rows=64,
+                                                 selector=selector)
         tc, stats = stc_compress(d + r, 0.02)
         np.testing.assert_allclose(np.asarray(tk), np.asarray(tc), atol=1e-5)
         assert int(ck) == int(stats.nnz)
@@ -79,23 +82,33 @@ class TestFusedSTC:
         np.testing.assert_allclose(np.asarray(tk + rk), np.asarray(d + r),
                                    rtol=1e-5, atol=1e-6)
 
-    def test_block_shape_sweep(self):
+    @pytest.mark.parametrize("selector", SELECTORS)
+    def test_block_shape_sweep(self, selector):
         """Result must be independent of the BlockSpec tiling."""
         d, r = _rand(10_000, 5), _rand(10_000, 6) * 0.1
         outs = []
         for br in (8, 64, 256, 512):
-            t, _, _, _, _ = stc_compress_kernel(d, r, 0.01, block_rows=br)
+            t, _, _, _, _ = stc_compress_kernel(d, r, 0.01, block_rows=br,
+                                                selector=selector)
             outs.append(np.asarray(t))
         for o in outs[1:]:
             np.testing.assert_allclose(o, outs[0], atol=1e-6)
 
     def test_fused_apply_direct(self):
+        """stc_apply reads the carried vector once (no delta/residual pair)."""
         d, r = _rand(4096, 7), _rand(4096, 8) * 0.1
+        carried = d + r
         t = jnp.float32(1.5)
         mu = jnp.float32(2.0)
-        tern, res = stc_apply(d, r, t, mu, block_rows=32)
-        tern_r, res_r = kref.stc_fused_ref(d, r, t, mu)
+        tern, res = stc_apply(carried, t, mu, block_rows=32)
+        tern_r, res_r = kref.stc_apply_ref(carried, t, mu)
         np.testing.assert_allclose(np.asarray(tern), np.asarray(tern_r),
                                    atol=1e-6)
         np.testing.assert_allclose(np.asarray(res), np.asarray(res_r),
+                                   atol=1e-6)
+        # against the legacy (delta, residual) oracle form as well
+        tern_l, res_l = kref.stc_fused_ref(d, r, t, mu)
+        np.testing.assert_allclose(np.asarray(tern), np.asarray(tern_l),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res), np.asarray(res_l),
                                    atol=1e-6)

@@ -3,12 +3,16 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (encode_ternary, decode_ternary, golomb_position_bits,
-                        make_protocol, stc_compress, stc_message_bits)
+from repro.core import (Codec, encode_ternary, decode_ternary,
+                        golomb_position_bits, make_protocol,
+                        register_protocol, registered_protocols, stc_compress,
+                        stc_message_bits)
 
 # --- 1. compress a "weight update" with Sparse Ternary Compression ----------
 key = jax.random.PRNGKey(0)
@@ -40,3 +44,27 @@ msg, state, _ = proto.client_compress(update, state)
 recon = msg + state.residual
 assert np.allclose(np.asarray(recon), np.asarray(update), rtol=1e-5)
 print("error feedback: msg + residual == update (exact)")
+
+# --- 5. protocols are pluggable codecs: register your own -------------------
+@register_protocol
+@dataclasses.dataclass(frozen=True)
+class RoundToHalf(Codec):
+    """Toy codec: snap every coordinate to a multiple of `step`."""
+    name = "round0.5"
+    step: float = 0.5
+
+    def encode(self, delta, state):
+        msg = self.step * jnp.round(delta / self.step)
+        return msg, state, None
+
+    def upload_bits(self, numel):
+        return 8.0 * numel                       # one int8 symbol per weight
+
+    def download_bits(self, numel, n_participating=1):
+        return 8.0 * numel
+
+toy = make_protocol("round0.5")
+msg, _, _ = toy.encode(update, None)
+print(f"registered codecs: {registered_protocols()}")
+print(f"custom codec kept {len(np.unique(np.asarray(msg)))} distinct values "
+      f"at {toy.upload_bits(update.size)/8/1024:.0f} KiB/message")

@@ -32,8 +32,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--steps", type=int, default=200)
+    from repro.core.protocols import get_protocol_class, registered_protocols
     ap.add_argument("--protocol", default="stc",
-                    choices=("stc", "topk", "signsgd", "fedavg", "baseline"))
+                    choices=registered_protocols())
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
@@ -55,9 +56,11 @@ def main():
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"protocol={args.protocol} mesh={dict(mesh.shape)}")
 
+    # demo-scale communication delay: cap the codec's default period at 4
+    delay = min(get_protocol_class(args.protocol)().local_iters, 4)
     tc = TrainConfig(protocol=args.protocol, lr=args.lr,
                      sparsity_up=1 / 100, sparsity_down=1 / 100,
-                     local_iters=4 if args.protocol == "fedavg" else 1)
+                     local_iters=delay)
     state = init_train_state(cfg, tc, n_clients=n_clients,
                              key=jax.random.PRNGKey(0))
     step = make_train_step(cfg, mesh, tc)

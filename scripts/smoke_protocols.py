@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Registry smoke target: run the federated example for EVERY registered
+codec (including third-party registrations) for 2 rounds each, so a protocol
+that breaks the trainer contract fails fast in CI.
+
+    python scripts/smoke_protocols.py [--rounds 2] [--model logreg]
+
+Exits non-zero if any codec fails.
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+       "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+
+def registered():
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.core import registered_protocols;"
+         "print(' '.join(registered_protocols()))"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, check=True)
+    return out.stdout.split()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--model", default="logreg")
+    ap.add_argument("--timeout", type=int, default=600)
+    args = ap.parse_args()
+
+    names = registered()
+    print(f"smoking {len(names)} registered codecs: {' '.join(names)}")
+    failures = []
+    for name in names:
+        cmd = [sys.executable, os.path.join(REPO, "examples",
+                                            "federated_noniid.py"),
+               "--rounds", str(args.rounds), "--model", args.model,
+               "--protocols", name]
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, env=ENV, cwd=REPO, capture_output=True,
+                               text=True, timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            print(f"FAIL {name} (timeout after {args.timeout}s)")
+            failures.append(name)
+            continue
+        dt = time.time() - t0
+        if r.returncode == 0:
+            print(f"OK   {name} ({dt:.0f}s)")
+        else:
+            tail = (r.stdout + r.stderr)[-800:].replace("\n", " | ")
+            print(f"FAIL {name} ({dt:.0f}s): {tail}")
+            failures.append(name)
+    if failures:
+        print(f"\n{len(failures)} codec(s) failed: {' '.join(failures)}")
+        return 1
+    print("\nall registered codecs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

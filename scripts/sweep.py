@@ -20,14 +20,18 @@ SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
 
 
 def run_one(job):
-    arch, shape, multi = job
+    arch, shape, multi, protocol = job
     mesh = "2x16x16" if multi else "16x16"
+    # "stc" keeps the historical artifact name; other codecs get a suffix
+    tag = "" if protocol == "stc" else f"__{protocol}"
     out = os.path.join(REPO, "artifacts", "dryrun",
-                       f"{arch}__{shape}__{mesh}.json")
+                       f"{arch}__{shape}__{mesh}{tag}.json")
     if os.path.exists(out):
-        return f"SKIP {arch} {shape} {mesh}"
+        return f"SKIP {arch} {shape} {mesh} {protocol}"
     cmd = [sys.executable, "-u", "-m", "repro.launch.dryrun",
-           "--arch", arch, "--shape", shape]
+           "--arch", arch, "--shape", shape, "--protocol", protocol]
+    if tag:
+        cmd += ["--variant", protocol]
     if multi:
         cmd.append("--multi-pod")
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
@@ -36,22 +40,25 @@ def run_one(job):
                        text=True, timeout=7200)
     dt = time.time() - t0
     if r.returncode == 0 and os.path.exists(out):
-        return f"OK   {arch} {shape} {mesh} ({dt:.0f}s)"
+        return f"OK   {arch} {shape} {mesh} {protocol} ({dt:.0f}s)"
     tail = (r.stdout + r.stderr)[-1200:].replace("\n", " | ")
-    return f"FAIL {arch} {shape} {mesh} ({dt:.0f}s): {tail}"
+    return f"FAIL {arch} {shape} {mesh} {protocol} ({dt:.0f}s): {tail}"
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=7)
     ap.add_argument("--meshes", nargs="+", default=["single", "multi"])
+    ap.add_argument("--protocols", nargs="+", default=["stc"],
+                    help="registered codec names to sweep (default: stc)")
     args = ap.parse_args()
 
     jobs = []
     for shape in SHAPES:                       # cheap shapes first
         for arch in ARCHS:                     # small archs first
             for m in args.meshes:
-                jobs.append((arch, shape, m == "multi"))
+                for proto in args.protocols:
+                    jobs.append((arch, shape, m == "multi", proto))
 
     log = os.path.join(REPO, "artifacts", "sweep_parallel.log")
     done = 0

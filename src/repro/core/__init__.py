@@ -19,6 +19,7 @@ from .compression import (
     stc_compress,
     stc_compress_pytree,
     ternarize,
+    ternary_quantize,
     top_k_mask,
     top_k_sparsify,
     unflatten_pytree,
@@ -31,19 +32,39 @@ from .golomb import (
     golomb_b_star,
     golomb_position_bits,
     stc_message_bits,
+    ternary_dense_bits,
 )
-from .protocols import PROTOCOLS, Protocol, make_protocol
-from .residual import ResidualState, compress_with_feedback, init_residual
+from .protocols import (
+    PROTOCOLS,
+    Codec,
+    Protocol,
+    get_protocol_class,
+    make_protocol,
+    register_protocol,
+    registered_protocols,
+)
+from .residual import (
+    ResidualState,
+    compress_with_feedback,
+    init_residual,
+    scatter_states,
+    stack_states,
+    take_states,
+)
 from .caching import UpdateCache
 
 __all__ = [
     "CompressionStats", "StcBackend", "get_stc_backend",
     "register_stc_backend", "flatten_pytree", "majority_vote_sign",
     "sign_compress",
-    "stc_compress", "stc_compress_pytree", "ternarize", "top_k_mask",
+    "stc_compress", "stc_compress_pytree", "ternarize", "ternary_quantize",
+    "top_k_mask",
     "top_k_sparsify", "unflatten_pytree", "decode_ternary", "encode_ternary",
     "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",
-    "golomb_position_bits", "stc_message_bits", "PROTOCOLS", "Protocol",
-    "make_protocol", "ResidualState", "compress_with_feedback", "init_residual",
+    "golomb_position_bits", "stc_message_bits", "ternary_dense_bits",
+    "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
+    "registered_protocols", "get_protocol_class",
+    "ResidualState", "compress_with_feedback", "init_residual",
+    "stack_states", "take_states", "scatter_states",
     "UpdateCache",
 ]

@@ -51,3 +51,13 @@ class UpdateCache:
         # The partial sum of s sparse updates has at most s-times the nnz;
         # H(P^(s)) <= s * H(ΔW~) is attained in the worst case (disjoint masks).
         return max(1, skipped) * bits_per_update
+
+    def sync_bits_batch(self, skipped, bits_per_update: float,
+                        model_bits: float) -> float:
+        """Total download cost for a cohort: vectorized ``sync_bits`` over an
+        integer array of per-client skipped-round counts."""
+        skipped = np.asarray(skipped, dtype=np.int64)
+        per_client = np.where(
+            skipped > len(self._updates), model_bits,
+            np.maximum(skipped, 1).astype(np.float64) * bits_per_update)
+        return float(per_client.sum())

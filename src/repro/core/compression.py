@@ -28,6 +28,7 @@ __all__ = [
     "top_k_mask",
     "top_k_sparsify",
     "ternarize",
+    "ternary_quantize",
     "stc_compress",
     "sign_compress",
     "majority_vote_sign",
@@ -103,6 +104,26 @@ def stc_compress(x: jnp.ndarray, p: float) -> tuple[jnp.ndarray, CompressionStat
     tern, mu = ternarize(x, mask)
     stats = CompressionStats(nnz=jnp.sum(mask), numel=jnp.asarray(x.size), mu=mu)
     return tern, stats
+
+
+def ternary_quantize(x: jnp.ndarray, theta: float = 0.75) -> tuple[jnp.ndarray, CompressionStats]:
+    """Dense ternary quantization (TWN thresholding; T-FedAvg, Xu et al. '20).
+
+    Keeps every entry with ``|x| > Δ`` where ``Δ = θ·mean(|x|)`` and maps the
+    survivors to ``{-µ, +µ}`` with µ the mean kept magnitude.  Unlike STC the
+    message is *dense* on the wire (every coordinate carries a ternary symbol)
+    so no position coding is needed -- see ``golomb.ternary_dense_bits``.
+    """
+    a = jnp.abs(x.astype(jnp.float32))
+    delta = theta * jnp.mean(a)
+    mask = a > delta
+    k = jnp.maximum(jnp.sum(mask), 1)
+    mu = jnp.sum(jnp.where(mask, a, 0.0)) / k.astype(jnp.float32)
+    out = jnp.where(mask, mu * jnp.sign(x.astype(jnp.float32)), 0.0).astype(x.dtype)
+    stats = CompressionStats(
+        nnz=jnp.sum(mask), numel=jnp.asarray(x.size), mu=mu.astype(x.dtype)
+    )
+    return out, stats
 
 
 def sign_compress(x: jnp.ndarray, step: float) -> tuple[jnp.ndarray, CompressionStats]:

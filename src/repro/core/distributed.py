@@ -33,7 +33,8 @@ from repro.core.selection import (DEFAULT_CAP, NBINS, PASSES, bin_index,
                                   locate_bin, resolve_interpret)
 
 __all__ = ["TreeStats", "tree_numel", "stc_compress_tree",
-           "sign_compress_tree", "tree_add", "tree_scale"]
+           "ternary_quantize_tree", "sign_compress_tree", "tree_add",
+           "tree_scale"]
 
 
 class TreeStats(NamedTuple):
@@ -221,6 +222,38 @@ def _finish_tree(tree, thresh, cnt_tot, sum_tot, numel):
 
     tern = jax.tree.map(tern_leaf, tree)
     return tern, TreeStats(nnz=cnt_tot, numel=numel, mu=mu, thresh=thresh)
+
+
+def ternary_quantize_tree(tree, theta: float, *, manual_axes=(),
+                          numel: int | None = None):
+    """Dense ternary quantization over a pytree (tree twin of
+    ``compression.ternary_quantize``): Δ = θ·mean|x| globally across leaves,
+    µ = mean kept magnitude.  Two sweeps, no gathers."""
+    numel = numel if numel is not None else tree_numel(tree)
+    s_all = jnp.zeros((), jnp.float32)                          # sweep 1
+    for leaf in jax.tree.leaves(tree):
+        s_all = s_all + jnp.sum(jnp.abs(leaf.astype(jnp.float32)))
+    s_all = _psum(s_all, manual_axes)
+    delta = theta * s_all / jnp.float32(numel)
+
+    cnt = jnp.zeros((), jnp.int32)                              # sweep 2
+    s_kept = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        a = jnp.abs(leaf.astype(jnp.float32))
+        m = a > delta
+        cnt = cnt + jnp.sum(m.astype(jnp.int32))
+        s_kept = s_kept + jnp.sum(jnp.where(m, a, 0.0))
+    cnt = _psum(cnt, manual_axes)
+    s_kept = _psum(s_kept, manual_axes)
+    mu = s_kept / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+    def tern_leaf(x):
+        xf = x.astype(jnp.float32)
+        return jnp.where(jnp.abs(xf) > delta, mu * jnp.sign(xf), 0.0
+                         ).astype(x.dtype)
+
+    tern = jax.tree.map(tern_leaf, tree)
+    return tern, TreeStats(nnz=cnt, numel=numel, mu=mu, thresh=delta)
 
 
 def sign_compress_tree(tree, step: float):

@@ -28,6 +28,7 @@ __all__ = [
     "stc_message_bits",
     "fedavg_message_bits",
     "signsgd_message_bits",
+    "ternary_dense_bits",
     "encode_ternary",
     "decode_ternary",
 ]
@@ -71,6 +72,15 @@ def fedavg_message_bits(numel: int, weight_bits: int = 32) -> float:
 
 def signsgd_message_bits(numel: int) -> float:
     return float(numel)
+
+
+def ternary_dense_bits(numel: int) -> float:
+    """Dense ternary message (T-FedAvg-style, Xu et al. 2020).
+
+    Every weight carries one of {-µ, 0, +µ}: log2(3) bits/weight at the
+    entropy bound of an uncoded ternary stream, plus a 32-bit float µ.
+    """
+    return numel * math.log2(3.0) + 32.0
 
 
 # ---------------------------------------------------------------------------

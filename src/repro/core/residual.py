@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from .compression import CompressionStats
 
-__all__ = ["ResidualState", "init_residual", "compress_with_feedback"]
+__all__ = ["ResidualState", "init_residual", "compress_with_feedback",
+           "stack_states", "take_states", "scatter_states"]
 
 
 class ResidualState(NamedTuple):
@@ -32,6 +33,30 @@ class ResidualState(NamedTuple):
 def init_residual(like) -> ResidualState:
     res = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), like)
     return ResidualState(residual=res)
+
+
+# ---------------------------------------------------------------------------
+# Stacked per-client codec state.  A codec's ``init_client_state`` returns ONE
+# client's state pytree (or None for stateless codecs); the federated trainer
+# keeps the whole cohort as the same pytree with a leading (n_clients,) axis.
+# These helpers are pytree-generic so the trainer never inspects the codec.
+# ---------------------------------------------------------------------------
+
+
+def stack_states(state, n: int):
+    """Replicate one client's state pytree along a leading (n,) client axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), state)
+
+
+def take_states(states, idx):
+    """Select the per-client slices ``states[idx]`` of a stacked state."""
+    return jax.tree.map(lambda x: x[idx], states)
+
+
+def scatter_states(states, idx, new):
+    """Write updated per-client slices back into the stacked state."""
+    return jax.tree.map(lambda full, upd: full.at[idx].set(upd), states, new)
 
 
 def compress_with_feedback(

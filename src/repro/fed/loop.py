@@ -6,6 +6,11 @@ global apply) is ONE jit'd function, vmapped over the participating clients.
 Partial participation, the server-side update cache (Sec. V-B) and the bit
 ledger (Eq. 1) live in the host driver.
 
+The trainer is protocol-agnostic: it talks to the codec ONLY through the
+:class:`repro.core.protocols.Codec` interface (``init_*_state`` /
+``encode_batch`` / ``aggregate`` / ``upload_bits`` / ``download_bits``), so
+any codec registered via ``register_protocol`` runs here unchanged.
+
 Works with any model from ``repro.models.paper_models`` (or any
 (init_fn, apply_fn) pair with ``apply(params, x) -> logits``).
 """
@@ -13,19 +18,16 @@ Works with any model from ``repro.models.paper_models`` (or any
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import golomb
 from repro.core.caching import UpdateCache
-from repro.core.compression import (flatten_pytree, get_stc_backend,
-                                    majority_vote_sign, sign_compress,
-                                    top_k_sparsify, unflatten_pytree)
-from repro.core.protocols import Protocol
+from repro.core.compression import flatten_pytree, unflatten_pytree
+from repro.core.protocols import Codec
+from repro.core.residual import scatter_states, stack_states, take_states
 from repro.data.synthetic import Dataset
 from repro.fed.environment import FedEnvironment, split_data
 
@@ -50,7 +52,7 @@ class FederatedTrainer:
     """Simulates Algorithm 2 on one host."""
 
     def __init__(self, model: tuple[Callable, Callable], train: Dataset,
-                 test: Dataset, env: FedEnvironment, protocol: Protocol,
+                 test: Dataset, env: FedEnvironment, protocol: Codec,
                  tcfg: TrainerConfig = TrainerConfig()):
         self.apply_fn = model[1]
         self.env = env
@@ -68,11 +70,12 @@ class FederatedTrainer:
         self.splits = split_data(train.y, env, seed=tcfg.seed)
         self.rng = np.random.default_rng(tcfg.seed + 1)
 
-        # stacked per-client optimizer/compressor state (fp32)
+        # stacked per-client optimizer state (fp32) + codec state pytrees
         c = env.n_clients
         self.client_mom = jnp.zeros((c, self.numel), jnp.float32)
-        self.client_res = jnp.zeros((c, self.numel), jnp.float32)
-        self.server_res = jnp.zeros((self.numel,), jnp.float32)
+        self.client_state = stack_states(
+            protocol.init_client_state(self.numel), c)
+        self.server_state = protocol.init_server_state(self.numel)
         self.last_seen = np.zeros(c, dtype=np.int64)  # round of last participation
         self.cache = UpdateCache(self.numel, max_rounds=64)
 
@@ -86,7 +89,7 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------ jit
     def _build_round_fn(self):
-        proto = self.protocol
+        codec = self.protocol
         lr = self.tcfg.lr
         mom = self.tcfg.momentum
         spec = self.spec
@@ -96,10 +99,6 @@ class FederatedTrainer:
         treedef, shapes = spec
         spec_f32 = (treedef, [(shape, jnp.float32) for shape, _ in shapes])
         apply_fn = self.apply_fn
-        # compressor registry: the protocol's backend flag picks the STC
-        # implementation ("jnp" operator vs Pallas histogram kernels).
-        stc_backend = get_stc_backend(proto.backend) \
-            if proto.name == "stc" else None
 
         def local_update(params_vec, mom_vec, xs, ys):
             """One client: ``local_iters`` SGD steps. xs: (n, b, ...)."""
@@ -126,44 +125,16 @@ class FederatedTrainer:
             delta = flatten_pytree(p_final)[0] - params_vec
             return delta, flatten_pytree(v_final)[0]
 
-        def compress_clients(deltas, res_sel):
-            """Upstream compression of the whole (P, numel) round at once."""
-            if proto.name in ("baseline", "fedavg"):
-                return deltas, res_sel
-            if proto.name == "signsgd":
-                msgs = jax.vmap(
-                    lambda d: sign_compress(d, proto.sign_step)[0])(deltas)
-                return msgs, res_sel
-            if proto.name == "topk":
-                carried = deltas + res_sel
-                msgs = jax.vmap(
-                    lambda c: top_k_sparsify(c, proto.sparsity_up)[0])(carried)
-                return msgs, carried - msgs
-            # stc: one batched backend call (a single kernel launch per stage
-            # on the "kernel" backend) instead of a vmap of selections
-            msgs, new_res, _ = stc_backend.compress_with_residual_batch(
-                deltas, res_sel, proto.sparsity_up)
-            return msgs, new_res
-
-        def round_fn(params_vec, server_res, mom_sel, res_sel, xs, ys):
+        def round_fn(params_vec, server_state, mom_sel, cstate_sel, xs, ys):
             """xs: (P, iters, b, ...); ys: (P, iters, b)."""
             deltas, new_mom = jax.vmap(
                 lambda m, x, y: local_update(params_vec, m, x, y)
             )(mom_sel, xs, ys)
-            msgs, new_res = compress_clients(deltas, res_sel)
-
-            if proto.name == "signsgd":
-                global_delta = majority_vote_sign(msgs, proto.sign_step)
-            else:
-                mean = jnp.mean(msgs, axis=0)
-                if proto.name == "stc":
-                    global_delta, server_res, _ = \
-                        stc_backend.compress_with_residual(
-                            mean, server_res, proto.sparsity_down)
-                else:
-                    global_delta = mean
+            # the entire protocol is these two codec calls
+            msgs, new_cstate, _ = codec.encode_batch(deltas, cstate_sel)
+            global_delta, server_state, _ = codec.aggregate(msgs, server_state)
             new_params = params_vec + global_delta
-            return new_params, server_res, new_mom, new_res, global_delta
+            return new_params, server_state, new_mom, new_cstate, global_delta
 
         return jax.jit(round_fn)
 
@@ -193,22 +164,23 @@ class FederatedTrainer:
         xs, ys = self._sample_batches(sel, proto.local_iters)
 
         mom_sel = self.client_mom[sel]
-        res_sel = self.client_res[sel]
-        (self.params_vec, self.server_res, new_mom, new_res,
-         global_delta) = self._round_fn(self.params_vec, self.server_res,
-                                        mom_sel, res_sel, xs, ys)
+        cstate_sel = take_states(self.client_state, sel)
+        (self.params_vec, self.server_state, new_mom, new_cstate,
+         global_delta) = self._round_fn(self.params_vec, self.server_state,
+                                        mom_sel, cstate_sel, xs, ys)
         self.client_mom = self.client_mom.at[sel].set(new_mom)
-        self.client_res = self.client_res.at[sel].set(new_res)
+        self.client_state = scatter_states(self.client_state, sel, new_cstate)
 
         # ---- bit ledger (Eq. 1) + partial-participation sync cost ----------
         self.bits_up += p * proto.upload_bits(self.numel)
         per_update = proto.download_bits(self.numel, n_participating=p)
         model_bits = 32.0 * self.numel
-        for cid in sel:
-            skipped = self.round - self.last_seen[cid]
-            self.bits_down += self.cache.sync_bits(int(skipped), per_update,
-                                                   model_bits)
-            self.last_seen[cid] = self.round
+        # vectorized over the cohort: sel is duplicate-free, so the batched
+        # ledger update is exactly the old per-client loop
+        skipped = self.round - self.last_seen[sel]
+        self.bits_down += self.cache.sync_bits_batch(skipped, per_update,
+                                                     model_bits)
+        self.last_seen[sel] = self.round
         self.cache.push(np.asarray(global_delta))
         self.round += 1
 

@@ -57,10 +57,11 @@ def magnitude_histogram_ref(x: jnp.ndarray, scale: jnp.ndarray,
     """Per-bin (count, Σ|x|) with the linear binning of ``hist_select``.
 
     Must use the *identical* bin expression as the kernel so masks agree
-    bit-for-bit: ``bin = clip(int(|x| * scale), 0, bins - 1)``.
+    bit-for-bit -- hence the shared ``selection.bin_index`` definition.
     """
+    from repro.core.selection import bin_index
     a = jnp.abs(x.astype(jnp.float32))
-    idx = jnp.clip((a * scale).astype(jnp.int32), 0, bins - 1)
+    idx = bin_index(a, scale, bins)
     cnt = jnp.bincount(idx, length=bins).astype(jnp.int32)
     sums = jnp.bincount(idx, weights=a, length=bins).astype(jnp.float32)
     return cnt, sums

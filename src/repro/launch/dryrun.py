@@ -214,8 +214,9 @@ def main():
                     help="run every (arch x shape) combination")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the 2x16x16 = 512-chip mesh")
+    from repro.core.protocols import registered_protocols
     ap.add_argument("--protocol", default="stc",
-                    choices=("stc", "topk", "signsgd", "fedavg", "baseline"))
+                    choices=registered_protocols())
     ap.add_argument("--variant", default="",
                     help="tag appended to the artifact filename (perf iters)")
     ap.add_argument("--logit-chunk", type=int, default=0,

@@ -7,12 +7,16 @@ Mapping of the paper's protocol onto the pod (DESIGN.md §2):
   parallelism inside a client, handled by GSPMD);
 * each client computes grads on its own batch shard ONLY (no gradient psum --
   that is the point of federated learning);
-* upstream: per-client tree-STC with error feedback (Eqs. 8-11);
-* aggregation + downstream: ``lax.psum`` of the ternary messages over the
-  client axes (the only protocol-level collective), then server tree-STC with
-  its own residual (Eqs. 10/12) -- computed identically on every block, so the
-  broadcast is implicit;
-* supported protocols: stc | topk | signsgd | fedavg | baseline.
+* upstream: the codec's ``tree_encode`` (per-client, with error feedback
+  where the codec keeps one -- Eqs. 8-11);
+* aggregation + downstream: the codec's ``tree_reduce`` collective over the
+  client axes (the only protocol-level collective), then ``tree_decode`` with
+  the server residual (Eqs. 10/12) -- computed identically on every block, so
+  the broadcast is implicit;
+* supported protocols: every codec registered in
+  :mod:`repro.core.protocols` (stc / topk / signsgd / fedavg / baseline /
+  ternquant / any third-party registration) -- there is no protocol dispatch
+  in this module.
 
 Momentum defaults OFF per the paper's lesson (6) (stale client momentum harms
 non-iid + partial-participation training); pass momentum>0 to enable
@@ -34,20 +38,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import (sign_compress_tree, stc_compress_tree,
-                                    tree_add, tree_numel)
+from repro.core.protocols import Codec, get_protocol_class
 from repro.models import init_model, lm_loss
 from repro.models.config import ModelConfig
 from repro.sharding.rules import (batch_spec, fit_spec, param_shardings,
                                   param_specs)
 
-__all__ = ["TrainConfig", "init_train_state", "make_train_step",
+__all__ = ["TrainConfig", "codec_for", "init_train_state", "make_train_step",
            "state_shardings", "batch_shardings"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    protocol: str = "stc"           # stc | topk | signsgd | fedavg | baseline
+    protocol: str = "stc"           # any codec registered in core.protocols
     lr: float = 0.1
     momentum: float = 0.0           # paper lesson (6): keep 0 in fed settings
     sparsity_up: float = 1 / 400
@@ -58,23 +61,26 @@ class TrainConfig:
     stc_iters: int = 32             # k-selection bisection rounds (§Perf lever)
 
 
-def _needs_client_residual(tc: TrainConfig) -> bool:
-    return tc.protocol in ("stc", "topk")
-
-
-def _needs_server_residual(tc: TrainConfig) -> bool:
-    return tc.protocol == "stc"
+def codec_for(tc: TrainConfig) -> Codec:
+    """Instantiate the registered codec named by ``tc.protocol``, forwarding
+    exactly the TrainConfig hyperparameters the codec declares as fields."""
+    cls = get_protocol_class(tc.protocol)
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = dict(sparsity_up=tc.sparsity_up, sparsity_down=tc.sparsity_down,
+              sign_step=tc.sign_step, local_iters=tc.local_iters)
+    return cls(**{k: v for k, v in kw.items() if k in fields})
 
 
 def init_train_state(cfg: ModelConfig, tc: TrainConfig, n_clients: int, key):
     """TrainState pytree. Residuals/momentum are fp32, client-major."""
+    codec = codec_for(tc)
     params = init_model(cfg, key)
     state = {"params": params, "step": jnp.zeros((), jnp.int32)}
     f32_like = lambda p: jnp.zeros(p.shape, jnp.float32)
     stacked = lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32)
-    if _needs_client_residual(tc):
+    if codec.has_client_state():
         state["client_res"] = jax.tree.map(stacked, params)
-    if _needs_server_residual(tc):
+    if codec.has_server_state():
         state["server_res"] = jax.tree.map(f32_like, params)
     if tc.momentum > 0:
         state["momentum"] = jax.tree.map(stacked, params)
@@ -136,7 +142,7 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
     ca = _client_axes(mesh)
     n_clients = math.prod(mesh.shape[a] for a in ca) if ca else 1
     numel = cfg.param_count()
-    proto = tc.protocol
+    codec = codec_for(tc)
 
     def loss_of(params, batch):
         return lm_loss(params, cfg, batch["tokens"], batch["labels"],
@@ -144,9 +150,10 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
                        compute_dtype=tc.compute_dtype)
 
     def local_delta(params, mom, batch):
-        """One client's update ΔW (and new momentum). fedavg runs
-        ``local_iters`` sequential SGD steps over microbatches."""
-        if proto == "fedavg" and tc.local_iters > 1:
+        """One client's update ΔW (and new momentum). A codec with a
+        communication-delay period runs ``local_iters`` sequential SGD steps
+        over microbatches."""
+        if codec.local_iters > 1:
             n = tc.local_iters
             b_local = batch["tokens"].shape[0]
             assert b_local % n == 0, (b_local, n)
@@ -199,45 +206,21 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         if mom is not None:
             new_state["momentum"] = jax.tree.map(lambda x: x[None], mom)
 
-        if proto in ("stc", "topk"):
-            cres = jax.tree.map(lambda x: x[0], state["client_res"])
-            carried = tree_add(delta, cres)
-            tern, st = stc_compress_tree(carried, tc.sparsity_up, numel=numel,
-                                         iters=tc.stc_iters)
-            if proto == "topk":
-                # pure top-k keeps magnitudes: mask = |x| >= thresh
-                tern = jax.tree.map(
-                    lambda x: jnp.where(jnp.abs(x) >= st.thresh, x, 0.0),
-                    carried)
-            new_cres = jax.tree.map(lambda c, t: c - t, carried, tern)
+        # ---- the entire protocol: three codec calls, zero dispatch ---------
+        cres = (jax.tree.map(lambda x: x[0], state["client_res"])
+                if "client_res" in state else None)
+        msg, new_cres, m_up = codec.tree_encode(delta, cres, numel=numel,
+                                                iters=tc.stc_iters)
+        if "client_res" in state:
             new_state["client_res"] = jax.tree.map(lambda x: x[None], new_cres)
-            # ---- upload: the ONLY protocol-level collective ----------------
-            mean_msg = jax.tree.map(
-                lambda t: jax.lax.psum(t, ca) / n_clients, tern) if ca else tern
-            metrics["nnz_up"] = st.nnz
-            if proto == "stc":
-                carried_srv = tree_add(mean_msg, state["server_res"])
-                down, st2 = stc_compress_tree(carried_srv, tc.sparsity_down,
-                                              numel=numel, iters=tc.stc_iters)
-                new_state["server_res"] = jax.tree.map(
-                    lambda c, t: c - t, carried_srv, down)
-                metrics["nnz_down"] = st2.nnz
-                global_delta = down
-            else:
-                global_delta = mean_msg
-        elif proto == "signsgd":
-            msg = sign_compress_tree(delta, tc.sign_step)
-            if ca:
-                votes = jax.tree.map(lambda t: jax.lax.psum(jnp.sign(t), ca),
-                                     msg)
-            else:
-                votes = jax.tree.map(jnp.sign, msg)
-            global_delta = jax.tree.map(
-                lambda v: tc.sign_step * jnp.sign(v), votes)
-        else:  # baseline / fedavg: dense mean of client updates
-            global_delta = jax.tree.map(
-                lambda t: (jax.lax.psum(t, ca) / n_clients) if ca else t,
-                delta)
+        # ---- upload: the ONLY protocol-level collective --------------------
+        combined = codec.tree_reduce(msg, ca, n_clients)
+        global_delta, new_sres, m_down = codec.tree_decode(
+            combined, state.get("server_res"), numel=numel, iters=tc.stc_iters)
+        if "server_res" in state:
+            new_state["server_res"] = new_sres
+        metrics.update(m_up)
+        metrics.update(m_down)
 
         new_state["params"] = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) +
@@ -252,10 +235,10 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         "params": P(), "step": P(),
     }
     out_specs_state = {"params": P(), "step": P()}
-    if proto in ("stc", "topk"):
+    if codec.has_client_state():
         state_specs_in["client_res"] = P(ca)
         out_specs_state["client_res"] = P(ca)
-    if proto == "stc":
+    if codec.has_server_state():
         state_specs_in["server_res"] = P()
         out_specs_state["server_res"] = P()
     # momentum specs added dynamically at call time via same prefix trick

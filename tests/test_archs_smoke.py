@@ -15,6 +15,10 @@ jax.config.update("jax_platform_name", "cpu")
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32
 
+# the 10-arch zoo sweep dominates suite wall-clock; `pytest -m "not slow"`
+# is the fast inner loop, full `pytest` stays the tier-1 gate
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg):
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,

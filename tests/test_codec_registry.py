@@ -1,0 +1,319 @@
+"""The pluggable codec registry: legacy-dispatch equivalence, registration,
+the new `ternquant` codec, the deduped topk bit ledger, and the vectorized
+partial-participation sync-cost accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Codec, PROTOCOLS, ResidualState, UpdateCache,
+                        get_stc_backend, majority_vote_sign, make_protocol,
+                        register_protocol, registered_protocols,
+                        sign_compress, ternary_quantize, top_k_sparsify)
+from repro.core import golomb
+from repro.core.protocols import _REGISTRY
+from repro.data import make_classification
+from repro.fed import FedEnvironment, FederatedTrainer, TrainerConfig
+from repro.models.paper_models import MODEL_ZOO
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape) * scale,
+        jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=1200, n_test=300)
+
+
+# ---------------------------------------------------------------------------
+# legacy equivalence: the registry codecs must reproduce, bit for bit, the
+# pre-refactor string-dispatch round (the old fed/loop compress_clients +
+# aggregation branches, reimplemented verbatim below as the oracle).
+# ---------------------------------------------------------------------------
+
+
+def _legacy_round(name, proto, deltas, res_sel, server_res):
+    """The old `if proto.name == ...` round, spelled out."""
+    if name in ("baseline", "fedavg"):
+        msgs, new_res = deltas, res_sel
+    elif name == "signsgd":
+        msgs = jax.vmap(lambda d: sign_compress(d, proto.sign_step)[0])(deltas)
+        new_res = res_sel
+    elif name == "topk":
+        carried = deltas + res_sel
+        msgs = jax.vmap(
+            lambda c: top_k_sparsify(c, proto.sparsity_up)[0])(carried)
+        new_res = carried - msgs
+    elif name == "stc":
+        be = get_stc_backend(proto.backend)
+        msgs, new_res, _ = be.compress_with_residual_batch(
+            deltas, res_sel, proto.sparsity_up)
+    else:
+        raise ValueError(name)
+
+    if name == "signsgd":
+        global_delta, new_srv = majority_vote_sign(msgs, proto.sign_step), \
+            server_res
+    else:
+        mean = jnp.mean(msgs, axis=0)
+        if name == "stc":
+            be = get_stc_backend(proto.backend)
+            global_delta, new_srv, _ = be.compress_with_residual(
+                mean, server_res, proto.sparsity_down)
+        else:
+            global_delta, new_srv = mean, server_res
+    return msgs, new_res, global_delta, new_srv
+
+
+class TestLegacyEquivalence:
+    @pytest.mark.parametrize("name", PROTOCOLS)
+    def test_round_bit_identical(self, name):
+        P, n = 4, 600
+        proto = make_protocol(name, **(
+            dict(sparsity_up=1 / 30, sparsity_down=1 / 30)
+            if name == "stc" else
+            dict(sparsity_up=1 / 30) if name == "topk" else {}))
+        deltas = _rand((P, n), seed=3)
+        res_sel = _rand((P, n), seed=4, scale=0.1)
+        server_res = _rand((n,), seed=5, scale=0.1)
+
+        ref_msgs, ref_res, ref_gd, ref_srv = _legacy_round(
+            name, proto, deltas, res_sel, server_res)
+
+        # codec path: wrap the same raw arrays into the codec's state pytrees
+        cstates = (ResidualState(residual=res_sel)
+                   if proto.init_client_state(n) is not None else None)
+        sstate = (ResidualState(residual=server_res)
+                  if proto.init_server_state(n) is not None else None)
+
+        msgs, new_cstates, _ = proto.encode_batch(deltas, cstates)
+        gd, new_sstate, _ = proto.aggregate(msgs, sstate)
+
+        np.testing.assert_array_equal(np.asarray(msgs), np.asarray(ref_msgs))
+        np.testing.assert_array_equal(np.asarray(gd), np.asarray(ref_gd))
+        if new_cstates is not None:
+            np.testing.assert_array_equal(
+                np.asarray(new_cstates.residual), np.asarray(ref_res))
+        if new_sstate is not None:
+            np.testing.assert_array_equal(
+                np.asarray(new_sstate.residual), np.asarray(ref_srv))
+
+    @pytest.mark.parametrize("name", PROTOCOLS)
+    def test_ledger_matches_legacy_formulas(self, name):
+        """upload/download bits match the pre-refactor analytic entries."""
+        n = 86_548
+        proto = make_protocol(name)
+        if name in ("baseline", "fedavg"):
+            assert proto.upload_bits(n) == golomb.fedavg_message_bits(n)
+        elif name == "signsgd":
+            assert proto.upload_bits(n) == golomb.signsgd_message_bits(n)
+        elif name == "stc":
+            assert proto.upload_bits(n) == golomb.stc_message_bits(
+                n, proto.sparsity_up)
+        assert proto.download_bits(n, n_participating=1) > 0
+
+
+class TestRegistry:
+    def test_all_paper_protocols_registered(self):
+        for name in PROTOCOLS:
+            assert name in registered_protocols()
+        assert "ternquant" in registered_protocols()
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(ValueError) as ei:
+            make_protocol("nope")
+        msg = str(ei.value)
+        assert "nope" in msg
+        for name in registered_protocols():
+            assert name in msg
+
+    def test_duplicate_registration_is_loud(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_protocol(name="stc")
+            @dataclasses.dataclass(frozen=True)
+            class Impostor(Codec):
+                name = "stc"
+        assert type(make_protocol("stc")).__name__ == "StcCodec"
+
+    def test_factory_backward_compatible(self):
+        stc = make_protocol("stc", sparsity_up=1 / 50, backend="jnp")
+        assert stc.sparsity_up == pytest.approx(1 / 50)
+        assert stc.sparsity_down == pytest.approx(1 / 400)
+        assert stc.error_feedback
+        fed = make_protocol("fedavg")
+        assert fed.local_iters == 400
+        # pre-registry kwargs stay accepted: inert fields drop, contradictory
+        # ClassVar overrides and unknown fields are loud
+        topk = make_protocol("topk", sparsity_up=1 / 100, error_feedback=True,
+                             sparsity_down=1 / 100)
+        assert topk.sparsity_up == pytest.approx(1 / 100)
+        with pytest.raises(ValueError, match="fixes error_feedback"):
+            make_protocol("stc", error_feedback=False)
+        with pytest.raises(TypeError, match="no field"):
+            make_protocol("stc", sparsity_sideways=0.1)
+
+    def test_custom_codec_end_to_end(self, data):
+        """A ≤30-line third-party codec registers and trains via the same
+        trainer with zero trainer changes."""
+
+        @register_protocol
+        @dataclasses.dataclass(frozen=True)
+        class Int8Codec(Codec):                                  # line 1
+            """Stateless uniform int8 quantization of the update."""
+            name = "int8-test"
+            levels: int = 255
+
+            def encode(self, delta, state):
+                s = jnp.max(jnp.abs(delta)) + 1e-12
+                q = jnp.round(delta / s * (self.levels // 2))
+                return q * s / (self.levels // 2), state, None
+
+            def upload_bits(self, numel):
+                return 8.0 * numel + 32.0
+
+            def download_bits(self, numel, n_participating=1):
+                return 8.0 * numel + 32.0                        # line 14
+
+        try:
+            train, test = data
+            env = FedEnvironment(n_clients=6, participation=0.5,
+                                 classes_per_client=2, batch_size=10)
+            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env,
+                                  make_protocol("int8-test"),
+                                  TrainerConfig(lr=0.05))
+            tr.run(3, eval_every=3)
+            assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+            assert tr.bits_up == pytest.approx(
+                3 * 3 * (8.0 * tr.numel + 32.0))    # 3 rounds x 3 clients
+        finally:
+            _REGISTRY.pop("int8-test", None)
+
+    def test_every_registered_codec_runs(self, data):
+        """Acceptance: all five paper protocols + ternquant end-to-end."""
+        train, test = data
+        env = FedEnvironment(n_clients=6, participation=0.5,
+                             classes_per_client=2, batch_size=10)
+        for name in registered_protocols():
+            kw = {"stc": dict(sparsity_up=1 / 20, sparsity_down=1 / 20),
+                  "topk": dict(sparsity_up=1 / 20),
+                  "fedavg": dict(local_iters=2)}.get(name, {})
+            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env,
+                                  make_protocol(name, **kw),
+                                  TrainerConfig(lr=0.05))
+            tr.run(2, eval_every=2)
+            assert np.all(np.isfinite(np.asarray(tr.params_vec))), name
+            assert tr.bits_up > 0 and tr.bits_down > 0, name
+
+
+class TestTernQuant:
+    def test_output_is_ternary(self):
+        x = _rand(1000, seed=7)
+        out, stats = ternary_quantize(x, 0.75)
+        vals = np.unique(np.asarray(out))
+        mu = float(stats.mu)
+        assert all(np.isclose(v, 0) or np.isclose(abs(v), mu, rtol=1e-5)
+                   for v in vals)
+        assert 0 < int(stats.nnz) < x.size
+
+    def test_error_feedback_exact(self):
+        p = make_protocol("ternquant")
+        st = p.init_client_state(400)
+        x = _rand(400, seed=8)
+        msg, st2, _ = p.encode(x, st)
+        np.testing.assert_allclose(np.asarray(msg + st2.residual),
+                                   np.asarray(x), rtol=1e-5)
+
+    def test_bits_between_signsgd_and_fedavg(self):
+        n = 100_000
+        tq = make_protocol("ternquant")
+        assert tq.upload_bits(n) == pytest.approx(n * np.log2(3.0) + 32.0)
+        assert golomb.signsgd_message_bits(n) < tq.upload_bits(n)
+        assert tq.upload_bits(n) < golomb.fedavg_message_bits(n) / 15
+
+    def test_tree_matches_flat(self):
+        """ternary_quantize_tree == ternary_quantize on the flattened tree."""
+        from repro.core.compression import flatten_pytree
+        from repro.core.distributed import ternary_quantize_tree
+        tree = {"a": _rand((40, 5), seed=9), "b": _rand(123, seed=10)}
+        vec, _ = flatten_pytree(tree)
+        flat_out, flat_stats = ternary_quantize(vec, 0.75)
+        tree_out, tree_stats = ternary_quantize_tree(tree, 0.75)
+        tree_vec = flatten_pytree(tree_out)[0]
+        np.testing.assert_allclose(np.asarray(tree_vec), np.asarray(flat_out),
+                                   rtol=1e-5, atol=1e-7)
+        assert int(tree_stats.nnz) == int(flat_stats.nnz)
+
+
+class TestTopkLedger:
+    def test_upload_is_16bit_positions_plus_fp32_values(self):
+        n = 100_000
+        topk = make_protocol("topk", sparsity_up=1 / 100)
+        k = n // 100
+        assert topk.upload_bits(n) == pytest.approx(k * (16.0 + 32.0))
+
+    def test_up_down_share_one_helper(self):
+        """download at 1 participant == upload (same sparse-message helper)."""
+        n = 50_000
+        topk = make_protocol("topk", sparsity_up=1 / 50)
+        assert topk.download_bits(n, n_participating=1) == \
+            topk.upload_bits(n)
+
+    def test_download_densifies_to_dense_fp32(self):
+        n = 10_000
+        topk = make_protocol("topk", sparsity_up=1 / 100)
+        assert topk.download_bits(n, n_participating=200) == \
+            golomb.fedavg_message_bits(n)
+
+
+class TestVectorizedSyncBits:
+    def test_batch_matches_loop(self):
+        cache = UpdateCache(numel=10, max_rounds=8)
+        for _ in range(5):
+            cache.push(np.zeros(10))
+        rng = np.random.default_rng(0)
+        skipped = rng.integers(0, 12, size=64)
+        per_update, model_bits = 123.5, 99_999.0
+        loop_total = sum(cache.sync_bits(int(s), per_update, model_bits)
+                         for s in skipped)
+        batch_total = cache.sync_bits_batch(skipped, per_update, model_bits)
+        assert batch_total == pytest.approx(loop_total)
+
+    def test_trainer_ledger_unchanged(self, data):
+        """Regression: the vectorized trainer ledger equals a per-client
+        replay of cache.sync_bits over the same participation trace."""
+        train, test = data
+        env = FedEnvironment(n_clients=8, participation=0.25,
+                             classes_per_client=2, batch_size=10)
+        proto = make_protocol("stc", sparsity_up=1 / 20, sparsity_down=1 / 20)
+        tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, env, proto,
+                              TrainerConfig(lr=0.05, seed=0))
+        # replay the ledger with the scalar API, mirroring EVERY draw the
+        # trainer's rng makes (client selection AND per-client batch sampling)
+        replay = np.random.default_rng(tr.tcfg.seed + 1)
+        cache = UpdateCache(tr.numel, max_rounds=64)
+        last_seen = np.zeros(env.n_clients, dtype=np.int64)
+        expected_down = 0.0
+        p = env.participants_per_round
+        per_update = proto.download_bits(tr.numel, n_participating=p)
+        model_bits = 32.0 * tr.numel
+        need = proto.local_iters * env.batch_size
+        for rnd in range(6):
+            sel = replay.choice(env.n_clients, size=p, replace=False)
+            for cid in sel:            # the _sample_batches draws
+                pool = tr.splits[cid]
+                replay.choice(pool, size=need, replace=len(pool) < need)
+            for cid in sel:            # the old per-client ledger loop
+                expected_down += cache.sync_bits(
+                    int(rnd - last_seen[cid]), per_update, model_bits)
+                last_seen[cid] = rnd
+            cache.push(np.zeros(tr.numel, np.float32))
+            tr.run_round()
+        assert tr.bits_down == pytest.approx(expected_down)

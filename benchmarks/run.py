@@ -7,8 +7,9 @@ Prints ``name,value,derived`` CSV rows.  The fed benchmarks are scaled-down
 ``roofline`` benchmark reads the dry-run artifacts if present.
 
 Whenever the ``kernels`` bench runs, its rows are also written to
-``benchmarks/BENCH_stc.json`` so the STC-compression perf trajectory is
-tracked across PRs (compare the committed file against a fresh run).
+``benchmarks/BENCH_stc.json`` (and the ``wire`` bench's to
+``benchmarks/BENCH_wire.json``) so the perf trajectories are tracked across
+PRs (compare the committed file against a fresh run).
 """
 
 from __future__ import annotations
@@ -19,12 +20,13 @@ import os
 import platform
 import sys
 
-BENCH_STC_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                              "BENCH_stc.json")
+_HERE = os.path.dirname(os.path.abspath(__file__))
+BENCH_STC_PATH = os.path.join(_HERE, "BENCH_stc.json")
+BENCH_WIRE_PATH = os.path.join(_HERE, "BENCH_wire.json")
 
 
-def write_bench_stc(rows) -> None:
-    """Persist kernel-bench rows (µs wall-clock) for cross-PR tracking."""
+def _write_bench(path: str, rows) -> None:
+    """Persist bench rows (µs wall-clock) for cross-PR tracking."""
     payload = {
         "generated": datetime.datetime.now(datetime.timezone.utc)
         .isoformat(timespec="seconds"),
@@ -34,9 +36,17 @@ def write_bench_stc(rows) -> None:
         "rows": [{"name": name, "us": round(float(val), 1), "note": derived}
                  for name, val, derived in rows],
     }
-    with open(BENCH_STC_PATH, "w") as f:
+    with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
+
+
+def write_bench_stc(rows) -> None:
+    _write_bench(BENCH_STC_PATH, rows)
+
+
+def write_bench_wire(rows) -> None:
+    _write_bench(BENCH_WIRE_PATH, rows)
 
 
 def main() -> None:
@@ -46,10 +56,10 @@ def main() -> None:
     from benchmarks import kernel_bench, paper_claims
 
     rows = []
-    which = args or ["golomb", "kernels", "fig3", "fig5", "fig2", "table4",
-                     "fig8", "roofline"]
+    which = args or ["golomb", "wire", "kernels", "fig3", "fig5", "fig2",
+                     "table4", "fig8", "roofline"]
     if quick:
-        which = args or ["golomb", "kernels", "fig3"]
+        which = args or ["golomb", "wire", "kernels", "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -57,6 +67,11 @@ def main() -> None:
             krows = kernel_bench.run(verbose=False)
             write_bench_stc(krows)
             rows += krows
+        elif name == "wire":
+            from benchmarks import wire_bench
+            wrows = wire_bench.run(verbose=False)
+            write_bench_wire(wrows)
+            rows += wrows
         elif name == "roofline":
             from benchmarks import roofline
             recs = roofline.load_records()

@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Codec, encode_ternary, decode_ternary,
+from repro.core import (Codec, decode_ternary, decode_ternary_words,
+                        encode_ternary, encode_ternary_words,
                         golomb_position_bits, make_protocol,
                         register_protocol, registered_protocols, stc_compress,
                         stc_message_bits)
@@ -32,10 +33,18 @@ print(f"message size: {bits/8/1024:.2f} KiB "
 print(f"bits per position (Eq. 17): {golomb_position_bits(p):.2f}")
 
 # --- 3. the REAL bitstream (Algorithms 3 & 4), roundtripped ------------------
-wire, mu, n = encode_ternary(np.asarray(tern), p)
-restored = decode_ternary(wire, mu, n, p)
+# vectorized packer (core.wire) -- what the trainers' measured ledger uses
+msg = encode_ternary_words(np.asarray(tern), p)
+restored = decode_ternary_words(msg, p)
 assert np.allclose(restored, np.asarray(tern), atol=1e-6)
-print(f"bitstream: {len(wire)} bits, roundtrip exact: True")
+# ... and it is bit-identical to the per-bit oracle codec (Algorithm 3)
+payload, bit_len, mu, n = encode_ternary(np.asarray(tern), p)
+assert msg.bit_len == bit_len
+assert np.array_equal(msg.payload_bytes(), payload)
+assert np.allclose(decode_ternary(payload, bit_len, mu, n, p), restored)
+print(f"bitstream: {msg.bit_len} bits measured "
+      f"(analytic expectation {stc_message_bits(update.size, p) - 32:.0f}), "
+      f"roundtrip exact: True")
 
 # --- 4. error feedback: nothing is ever lost ---------------------------------
 proto = make_protocol("stc", sparsity_up=p, sparsity_down=p)

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Fast CI lane: the full non-slow test suite + a 2-round end-to-end smoke of
+# every registered protocol codec.  (The slow lane is `pytest -m slow` plus
+# `python -m benchmarks.run`.)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -m "not slow" -q
+python scripts/smoke_protocols.py

@@ -3,7 +3,8 @@
 Public API:
     compression  -- top-k / ternarize / STC / signSGD operators (jit-able)
     residual     -- error-feedback residual accumulation (Eqs. 9/11/12)
-    golomb       -- Eq. 15-17 entropy models + real Golomb bitstream codec
+    golomb       -- Eq. 15-17 entropy models + per-bit oracle bitstream codec
+    wire         -- vectorized/batched wire-format packer (measured bits)
     protocols    -- Protocol objects: baseline / fedavg / signsgd / topk / stc
     caching      -- server partial-sum cache P^(s) for partial participation
 """
@@ -32,7 +33,20 @@ from .golomb import (
     golomb_b_star,
     golomb_position_bits,
     stc_message_bits,
+    stc_stream_bound_bits,
     ternary_dense_bits,
+)
+from .wire import (
+    WireBatch,
+    WireMessage,
+    decode_ternary_words,
+    decode_ternary_words_batch,
+    encode_ternary_words,
+    encode_ternary_words_batch,
+    get_wire_backend,
+    pack_sign_words,
+    register_wire_backend,
+    unpack_sign_words,
 )
 from .protocols import (
     PROTOCOLS,
@@ -61,7 +75,12 @@ __all__ = [
     "top_k_mask",
     "top_k_sparsify", "unflatten_pytree", "decode_ternary", "encode_ternary",
     "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",
-    "golomb_position_bits", "stc_message_bits", "ternary_dense_bits",
+    "golomb_position_bits", "stc_message_bits", "stc_stream_bound_bits",
+    "ternary_dense_bits",
+    "WireMessage", "WireBatch", "encode_ternary_words",
+    "encode_ternary_words_batch", "decode_ternary_words",
+    "decode_ternary_words_batch", "pack_sign_words", "unpack_sign_words",
+    "get_wire_backend", "register_wire_backend",
     "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
     "registered_protocols", "get_protocol_class",
     "ResidualState", "compress_with_feedback", "init_residual",

@@ -21,17 +21,39 @@ __all__ = ["UpdateCache"]
 
 
 class UpdateCache:
-    """Host-side ring buffer of global updates + lazily materialized partials."""
+    """Host-side ring buffer of global updates + lazily materialized partials.
+
+    ``partial_sum`` answers from a cached cumulative sum over the stacked
+    ring buffer (one vectorized ``np.add.accumulate``, no Python
+    accumulation loop), grown lazily to the deepest staleness actually
+    queried -- so a cohort of repeated queries costs O(1) each, and memory
+    stays bounded by the worst staleness seen, not ``max_rounds``.
+    """
 
     def __init__(self, numel: int, max_rounds: int = 32) -> None:
         self.numel = numel
         self.max_rounds = max_rounds
         self._updates: Deque[np.ndarray] = collections.deque(maxlen=max_rounds)
+        self._cum: Optional[np.ndarray] = None   # (depth, numel) prefix sums
         self.round = 0
 
     def push(self, update: np.ndarray) -> None:
         self._updates.appendleft(np.asarray(update, dtype=np.float32).reshape(-1))
+        self._cum = None                          # invalidate prefix cache
         self.round += 1
+
+    def _prefix_sums(self, depth: int) -> np.ndarray:
+        """(>= depth, numel) rows with row s-1 = P^(s), newest update first."""
+        have = 0 if self._cum is None else self._cum.shape[0]
+        if have < depth:
+            extra = np.stack([self._updates[t] for t in range(have, depth)])
+            np.add.accumulate(extra, axis=0, out=extra)
+            if have:
+                extra += self._cum[-1]
+                self._cum = np.concatenate([self._cum, extra])
+            else:
+                self._cum = extra
+        return self._cum
 
     def partial_sum(self, skipped: int) -> Optional[np.ndarray]:
         """P^(s): the sum of the last ``skipped`` updates, or None if too stale."""
@@ -39,13 +61,15 @@ class UpdateCache:
             return np.zeros(self.numel, dtype=np.float32)
         if skipped > len(self._updates):
             return None  # caller must download the full model
-        out = np.zeros(self.numel, dtype=np.float32)
-        for t in range(skipped):
-            out += self._updates[t]
-        return out
+        return self._prefix_sums(skipped)[skipped - 1].copy()
 
     def sync_bits(self, skipped: int, bits_per_update: float, model_bits: float) -> float:
-        """Download cost for a client that skipped ``skipped`` rounds (Eq. 13)."""
+        """Download cost for a client that skipped ``skipped`` rounds (Eq. 13).
+
+        ``bits_per_update`` may be the analytic expectation OR the measured
+        wire size of this round's update (see ``Codec.measured_download_bits``)
+        -- the Eq. 13 bound H(P^(s)) <= s*H(ΔW~) is applied either way.
+        """
         if skipped > len(self._updates):
             return model_bits
         # The partial sum of s sparse updates has at most s-times the nnz;

@@ -10,8 +10,13 @@ Two layers:
 
 * **Real codec** (host-side numpy, Algorithms 3 & 4): encodes the non-zero
   positions of a flat ternary tensor as unary(q)+binary(r) Golomb codewords
-  plus one sign bit per element and a 32-bit float µ.  Round-trip tested; the
-  measured bitstream length is asserted ≈ the analytic model in tests.
+  plus one sign bit per element and a 32-bit float µ, packed MSB-first into
+  bytes with an explicit bit length.  Round-trip tested; the measured
+  bitstream length is asserted ≈ the analytic model in tests.
+
+This per-bit loop is kept as the reference ORACLE; the production packer is
+the vectorized word-stream codec in :mod:`repro.core.wire`, which is asserted
+bit-identical to this one.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ __all__ = [
     "entropy_sparse",
     "entropy_sparse_ternary",
     "stc_message_bits",
+    "stc_stream_bound_bits",
     "fedavg_message_bits",
     "signsgd_message_bits",
     "ternary_dense_bits",
@@ -65,6 +71,23 @@ def stc_message_bits(numel: int, p: float) -> float:
     return k * (golomb_position_bits(p) + 1.0) + 32.0  # +32 for µ
 
 
+def stc_stream_bound_bits(numel: int, nnz: int, p: float) -> float:
+    """Deterministic ceiling on the measured Golomb stream length.
+
+    ``nnz`` distinct positions in ``[0, numel)`` have gaps summing to at most
+    ``numel``, so the unary quotients sum to at most ``(numel - nnz) / 2^b*``;
+    every non-zero then pays the terminator, ``b*`` remainder bits and one
+    sign bit, plus the 32-bit µ header.  Unlike :func:`stc_message_bits`
+    (the Eq. 17 *expectation* under the geometric gap model) this holds for
+    EVERY realizable mask, so ``measured <= bound`` is assertable round by
+    round -- the Eq. 13 / Eq. 15 cross-check of the measured ledger.
+    """
+    if nnz == 0:
+        return 32.0
+    b = golomb_b_star(p)
+    return float((numel - nnz) // (2 ** b) + nnz * (b + 2) + 32)
+
+
 def fedavg_message_bits(numel: int, weight_bits: int = 32) -> float:
     """FedAvg communicates the dense update."""
     return float(numel * weight_bits)
@@ -89,39 +112,57 @@ def ternary_dense_bits(numel: int) -> float:
 
 
 class _BitWriter:
+    """MSB-first bit sink backed by packed bytes (one bit per BIT, not per
+    byte: large models used to blow up 8x through the old uint8-per-bit
+    buffer).  ``getvalue`` returns the packed payload; ``len`` is in bits."""
+
     def __init__(self) -> None:
-        self._bits: list[int] = []
+        self._bytes = bytearray()
+        self._acc = 0          # partial byte, MSB-first
+        self._nacc = 0         # bits currently in _acc (0..7)
 
     def write(self, bit: int) -> None:
-        self._bits.append(bit & 1)
+        self._acc = (self._acc << 1) | (bit & 1)
+        self._nacc += 1
+        if self._nacc == 8:
+            self._bytes.append(self._acc)
+            self._acc = 0
+            self._nacc = 0
 
     def write_unary(self, q: int) -> None:
-        self._bits.extend([1] * q)
-        self._bits.append(0)
+        for _ in range(q):
+            self.write(1)
+        self.write(0)
 
     def write_binary(self, value: int, width: int) -> None:
         for shift in range(width - 1, -1, -1):
-            self._bits.append((value >> shift) & 1)
+            self.write((value >> shift) & 1)
 
     def getvalue(self) -> np.ndarray:
-        return np.asarray(self._bits, dtype=np.uint8)
+        """Packed payload bytes (zero-padded tail), MSB-first within bytes."""
+        tail = ([self._acc << (8 - self._nacc)] if self._nacc else [])
+        return np.frombuffer(bytes(self._bytes) + bytes(tail), np.uint8)
 
     def __len__(self) -> int:
-        return len(self._bits)
+        return 8 * len(self._bytes) + self._nacc
 
 
 class _BitReader:
-    def __init__(self, bits: np.ndarray) -> None:
-        self._bits = bits
+    """MSB-first reader over packed payload bytes with an explicit bit count."""
+
+    def __init__(self, payload: np.ndarray, bit_len: int) -> None:
+        self._payload = np.asarray(payload, dtype=np.uint8)
+        self._bit_len = int(bit_len)
         self._pos = 0
 
     def eof(self) -> bool:
-        return self._pos >= len(self._bits)
+        return self._pos >= self._bit_len
 
     def read(self) -> int:
-        b = int(self._bits[self._pos])
+        byte = int(self._payload[self._pos >> 3])
+        bit = (byte >> (7 - (self._pos & 7))) & 1
         self._pos += 1
-        return b
+        return bit
 
     def read_binary(self, width: int) -> int:
         v = 0
@@ -130,11 +171,17 @@ class _BitReader:
         return v
 
 
-def encode_ternary(tensor: np.ndarray, p: float) -> tuple[np.ndarray, float, int]:
+def encode_ternary(tensor: np.ndarray, p: float) -> tuple[np.ndarray, int, float, int]:
     """Algorithm 3: Golomb-encode a flat ternary tensor ``{-µ,0,µ}``.
 
-    Returns ``(bits, µ, n)`` where ``bits`` is a uint8 0/1 array. Each nnz is
-    encoded as Golomb(gap) followed by one sign bit (1 -> +µ).
+    Returns ``(payload, bit_len, µ, n)`` where ``payload`` is the packed
+    uint8 byte stream (MSB-first, zero-padded tail) and ``bit_len`` the exact
+    number of meaningful bits.  Each nnz is encoded as Golomb(gap) followed
+    by one sign bit (1 -> +µ).
+
+    This per-bit host loop is the ORACLE codec: the vectorized packer in
+    :mod:`repro.core.wire` must produce bit-identical streams (asserted in
+    tests); use the wire module for anything performance-sensitive.
     """
     tensor = np.asarray(tensor).reshape(-1)
     nz = np.flatnonzero(tensor)
@@ -149,16 +196,16 @@ def encode_ternary(tensor: np.ndarray, p: float) -> tuple[np.ndarray, float, int
         w.write_binary(r, b_star)
         w.write(1 if tensor[idx] > 0 else 0)
         prev = int(idx)
-    return w.getvalue(), mu, int(tensor.size)
+    return w.getvalue(), len(w), mu, int(tensor.size)
 
 
 def decode_ternary(
-    bits: np.ndarray, mu: float, n: int, p: float
+    payload: np.ndarray, bit_len: int, mu: float, n: int, p: float
 ) -> np.ndarray:
-    """Algorithm 4: decode a Golomb bitstream back to the flat ternary tensor."""
+    """Algorithm 4: decode a packed Golomb bitstream back to the flat tensor."""
     b_star = golomb_b_star(p)
     out = np.zeros(n, dtype=np.float32)
-    r = _BitReader(bits)
+    r = _BitReader(payload, bit_len)
     pos = -1
     q = 0
     while not r.eof():

@@ -23,6 +23,12 @@ The interface (flat-vector path, used by :class:`repro.fed.FederatedTrainer`):
   ``(global_delta, server_state, stats)``.
 * ``upload_bits(numel)`` / ``download_bits(numel, n_participating)`` --
   analytic bit ledger (Eq. 1), host-side floats.
+* ``encode_wire`` / ``decode_wire`` / ``encode_wire_batch`` +
+  ``measured_upload_bits`` / ``measured_download_bits`` -- the REAL
+  bitstream (host-side, :mod:`repro.core.wire`): codecs that set
+  ``wire_format = True`` get exact measured bits in the trainers' ledgers,
+  with the analytic formulas kept as a cross-check (``wire_bound_bits`` is
+  the deterministic per-message ceiling asserted in tests).
 
 The tree path (``tree_encode`` / ``tree_reduce`` / ``tree_decode``) is the
 same protocol expressed over a parameter *pytree* for the shard_map trainer,
@@ -52,8 +58,9 @@ from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from . import golomb
+from . import golomb, wire
 from .compression import (
     CompressionStats,
     get_stc_backend,
@@ -196,6 +203,81 @@ class Codec:
     def download_bits(self, numel: int, n_participating: int = 1) -> float:
         raise NotImplementedError(type(self).__name__)
 
+    # -- wire format (host-side measured ledger) -----------------------------
+    # A codec with ``wire_format = True`` can serialize its messages to the
+    # REAL bitstream, so trainers account measured bits (exact stream length
+    # + ``wire_header_bits`` of side information per message) instead of the
+    # analytic expectations above -- which are then kept as a cross-check.
+
+    wire_format: ClassVar[bool] = False
+    wire_header_bits: ClassVar[float] = 0.0
+    # True when the wire size is statically known (measured == analytic by
+    # construction, e.g. a dense 1-bit sign plane): trainers then skip the
+    # per-round device->host transfer + serialization unless explicitly
+    # asked to measure anyway.
+    wire_static_size: ClassVar[bool] = False
+
+    def encode_wire(self, msg: np.ndarray, *,
+                    direction: str = "up") -> wire.WireMessage:
+        """Serialize ONE already-compressed message to its wire bitstream."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no wire format")
+
+    def decode_wire(self, msg: wire.WireMessage, *,
+                    direction: str = "up") -> np.ndarray:
+        """Inverse of :meth:`encode_wire`, exact up to the wire format's
+        resolution (STC's position stream is lossless; a 1-bit sign plane
+        cannot represent exact zeros -- see :func:`wire.pack_sign_words`)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no wire format")
+
+    def encode_wire_batch(self, msgs: np.ndarray, *,
+                          direction: str = "up") -> wire.WireBatch:
+        """Serialize a stacked (P, numel) round of messages.  Codecs with a
+        genuinely batched packer (STC) override this fallback."""
+        return wire.concat_messages([
+            self.encode_wire(m, direction=direction)
+            for m in np.asarray(msgs)])
+
+    def measured_batch_bits(self, batch: wire.WireBatch) -> float:
+        """Total size of an already-encoded batch (override for codecs with
+        non-constant per-message side information)."""
+        return batch.total_bits() + batch.n_msgs * self.wire_header_bits
+
+    def measured_message_bits(self, msg: wire.WireMessage) -> float:
+        """Total size of ONE already-encoded message (stream + header)."""
+        return msg.bit_len + self.wire_header_bits
+
+    def measured_upload_bits(self, msgs: np.ndarray) -> float:
+        """EXACT upstream bits for a (P, numel) stack of compressed client
+        messages; falls back to the analytic model for wire-less codecs."""
+        msgs = np.asarray(msgs)
+        if not self.wire_format:
+            return msgs.shape[0] * self.upload_bits(msgs.shape[-1])
+        return self.measured_batch_bits(
+            self.encode_wire_batch(msgs, direction="up"))
+
+    def measured_download_bits(self, msg: np.ndarray,
+                               n_participating: int = 1) -> float:
+        """EXACT bits of ONE downstream (global update) message.
+
+        ``n_participating`` only matters for the analytic fallback of
+        wire-less codecs (whose downstream density can grow with the
+        cohort, e.g. topk); a real wire stream is measured as-is."""
+        msg = np.asarray(msg)
+        if not self.wire_format:
+            return self.download_bits(msg.size,
+                                      n_participating=n_participating)
+        return self.measured_message_bits(self.encode_wire(msg,
+                                                           direction="down"))
+
+    def wire_bound_bits(self, numel: int, nnz: int,
+                        direction: str = "up") -> Optional[float]:
+        """Deterministic per-message ceiling on the measured size (stream
+        PLUS header bits; None = no bound known); trainers log it so tests
+        can assert ``measured <= bound`` round by round."""
+        return None
+
     # -- tree path (distributed shard_map trainer) ---------------------------
     def has_client_state(self) -> bool:
         return self.init_client_state(0) is not None
@@ -289,10 +371,24 @@ class SignSGDCodec(Codec):
     name: ClassVar[str] = "signsgd"
 
     sign_step: float = 2e-4
+    wire_backend: str = "numpy"             # wire packer: "numpy" | "kernel"
+
+    wire_format: ClassVar[bool] = True      # dense sign plane, 1 bit/coord
+    wire_static_size: ClassVar[bool] = True  # numel bits, exactly, always
 
     def encode(self, delta, state):
         msg, stats = sign_compress(delta, self.sign_step)
         return msg, state, stats
+
+    def encode_wire(self, msg, *, direction="up"):
+        return wire.pack_sign_words(msg, self.sign_step,
+                                    backend=self.wire_backend)
+
+    def decode_wire(self, msg, *, direction="up"):
+        return wire.unpack_sign_words(msg)
+
+    def wire_bound_bits(self, numel, nnz, direction="up"):
+        return float(numel)                 # measured == analytic, exactly
 
     def aggregate(self, msgs, server_state):
         out = majority_vote_sign(msgs, self.sign_step)
@@ -383,9 +479,32 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
     sparsity_up: float = 1 / 400
     sparsity_down: float = 1 / 400
     backend: str = "jnp"                    # STC impl: "jnp" | "kernel"
+    wire_backend: str = "numpy"             # wire packer: "numpy" | "kernel"
+
+    wire_format: ClassVar[bool] = True      # Golomb position stream (Alg. 3)
+    wire_header_bits: ClassVar[float] = 32.0  # fp32 µ per message (Eq. 15)
 
     def init_server_state(self, numel: int) -> ResidualState:
         return init_residual(jnp.zeros((numel,), jnp.float32))
+
+    def _wire_p(self, direction: str) -> float:
+        return self.sparsity_up if direction == "up" else self.sparsity_down
+
+    def encode_wire(self, msg, *, direction="up"):
+        return wire.encode_ternary_words(msg, self._wire_p(direction),
+                                         backend=self.wire_backend)
+
+    def decode_wire(self, msg, *, direction="up"):
+        return wire.decode_ternary_words(msg, self._wire_p(direction))
+
+    def encode_wire_batch(self, msgs, *, direction="up"):
+        return wire.encode_ternary_words_batch(
+            np.asarray(msgs), self._wire_p(direction),
+            backend=self.wire_backend)
+
+    def wire_bound_bits(self, numel, nnz, direction="up"):
+        return golomb.stc_stream_bound_bits(numel, nnz,
+                                            self._wire_p(direction))
 
     def encode(self, delta, state):
         be = get_stc_backend(self.backend)

@@ -4,7 +4,10 @@ The round computation (local SGD on every participating client, upstream
 compression with error feedback, server aggregation, downstream compression,
 global apply) is ONE jit'd function, vmapped over the participating clients.
 Partial participation, the server-side update cache (Sec. V-B) and the bit
-ledger (Eq. 1) live in the host driver.
+ledger live in the host driver.  When the codec has a wire format the ledger
+is MEASURED -- every round's messages are actually serialized through
+:mod:`repro.core.wire` and the exact stream lengths accumulated -- with the
+analytic Eq. 1 model kept in the ``*_analytic`` columns as a cross-check.
 
 The trainer is protocol-agnostic: it talks to the codec ONLY through the
 :class:`repro.core.protocols.Codec` interface (``init_*_state`` /
@@ -40,6 +43,11 @@ class TrainerConfig:
     momentum: float = 0.0
     seed: int = 0
     eval_batch: int = 512
+    # Measure real wire bits whenever the codec has a wire format (the
+    # analytic Eq. 1 ledger is always kept alongside as a cross-check);
+    # False forces analytic-only accounting (no per-round host transfer).
+    # Codecs without a wire format are always analytic.
+    measure_bits: bool | None = None
 
 
 def _cross_entropy(logits, y):
@@ -80,8 +88,21 @@ class FederatedTrainer:
         self.cache = UpdateCache(self.numel, max_rounds=64)
 
         self.round = 0
+        # ``bits_up``/``bits_down`` are MEASURED wire bits when the codec has
+        # a wire format (and measuring is not disabled), analytic otherwise;
+        # the ``*_analytic`` columns always carry the Eq. 1 model.  A codec
+        # without a wire format cannot be measured, whatever the config says;
+        # one whose wire size is statically known (measured == analytic by
+        # construction, e.g. signsgd's dense sign plane) only serializes when
+        # measuring is explicitly requested.
+        self.measure_bits = protocol.wire_format and (
+            tcfg.measure_bits if tcfg.measure_bits is not None
+            else not protocol.wire_static_size)
         self.bits_up = 0.0
         self.bits_down = 0.0
+        self.bits_up_analytic = 0.0
+        self.bits_down_analytic = 0.0
+        self.wire_log: list[dict] = []   # per-round measured-vs-bound rows
         self.history: list[dict] = []
 
         self._round_fn = self._build_round_fn()
@@ -92,6 +113,7 @@ class FederatedTrainer:
         codec = self.protocol
         lr = self.tcfg.lr
         mom = self.tcfg.momentum
+        measure = self.measure_bits     # static: gates the msgs output
         spec = self.spec
         # momentum stays an fp32 pytree inside the scan (no per-step
         # flatten/unflatten round-trip); it is flattened once per round to
@@ -134,7 +156,11 @@ class FederatedTrainer:
             msgs, new_cstate, _ = codec.encode_batch(deltas, cstate_sel)
             global_delta, server_state, _ = codec.aggregate(msgs, server_state)
             new_params = params_vec + global_delta
-            return new_params, server_state, new_mom, new_cstate, global_delta
+            # the (P, numel) msgs buffer is only an output when the measured
+            # ledger will actually serialize it (None otherwise: no transfer,
+            # no extra live buffer)
+            return (new_params, server_state, new_mom, new_cstate,
+                    global_delta, msgs if measure else None)
 
         return jax.jit(round_fn)
 
@@ -166,23 +192,57 @@ class FederatedTrainer:
         mom_sel = self.client_mom[sel]
         cstate_sel = take_states(self.client_state, sel)
         (self.params_vec, self.server_state, new_mom, new_cstate,
-         global_delta) = self._round_fn(self.params_vec, self.server_state,
-                                        mom_sel, cstate_sel, xs, ys)
+         global_delta, msgs) = self._round_fn(self.params_vec,
+                                              self.server_state, mom_sel,
+                                              cstate_sel, xs, ys)
         self.client_mom = self.client_mom.at[sel].set(new_mom)
         self.client_state = scatter_states(self.client_state, sel, new_cstate)
 
-        # ---- bit ledger (Eq. 1) + partial-participation sync cost ----------
-        self.bits_up += p * proto.upload_bits(self.numel)
-        per_update = proto.download_bits(self.numel, n_participating=p)
+        # ---- bit ledger + partial-participation sync cost ------------------
+        # analytic (Eq. 1) columns always accumulate as the cross-check
+        up_analytic = p * proto.upload_bits(self.numel)
+        per_update_analytic = proto.download_bits(self.numel,
+                                                  n_participating=p)
         model_bits = 32.0 * self.numel
+        gd_np = np.asarray(global_delta)
+        if self.measure_bits:
+            batch = proto.encode_wire_batch(np.asarray(msgs), direction="up")
+            up = proto.measured_batch_bits(batch)
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+            self._log_wire_round(batch, down_msg, up, per_update)
+        else:
+            up, per_update = up_analytic, per_update_analytic
+        self.bits_up += up
+        self.bits_up_analytic += up_analytic
         # vectorized over the cohort: sel is duplicate-free, so the batched
         # ledger update is exactly the old per-client loop
         skipped = self.round - self.last_seen[sel]
         self.bits_down += self.cache.sync_bits_batch(skipped, per_update,
                                                      model_bits)
+        self.bits_down_analytic += self.cache.sync_bits_batch(
+            skipped, per_update_analytic, model_bits)
         self.last_seen[sel] = self.round
-        self.cache.push(np.asarray(global_delta))
+        self.cache.push(gd_np)
         self.round += 1
+
+    def _log_wire_round(self, batch, down_msg, up, per_update):
+        """Per-round measured-vs-ceiling row (Eq. 13 / Eq. 15 cross-check).
+
+        nnz comes from the just-encoded streams -- no extra O(P*numel) scan.
+        """
+        proto = self.protocol
+        up_bound = None
+        dn_bound = proto.wire_bound_bits(self.numel, down_msg.nnz, "down")
+        bounds = [proto.wire_bound_bits(self.numel, int(z), "up")
+                  for z in batch.nnz]
+        if bounds and all(b is not None for b in bounds):
+            up_bound = float(sum(bounds))   # bounds cover header bits too
+        self.wire_log.append({
+            "round": self.round, "bits_up": up, "bits_up_bound": up_bound,
+            "bits_down_per_update": per_update,
+            "bits_down_per_update_bound": dn_bound,
+        })
 
     def evaluate(self) -> float:
         n = len(self.test.y)
@@ -205,6 +265,9 @@ class FederatedTrainer:
                     "acc": acc,
                     "bits_up": self.bits_up,
                     "bits_down": self.bits_down,
+                    "bits_up_analytic": self.bits_up_analytic,
+                    "bits_down_analytic": self.bits_down_analytic,
+                    "measured": self.measure_bits,
                 }
                 self.history.append(rec)
                 if verbose:

@@ -11,6 +11,9 @@
   fallback for pathological inputs.
 * ``stc_compress``   -- fused mask → ternarize → error-feedback single-pass
   kernel over the carried vector (single + batched client axis).
+* ``bitpack``        -- wire-format word packing: 32 stream bits → one uint32
+  word per VPU shift-and-sum, the device half of the ``"kernel"`` wire
+  backend in :mod:`repro.core.wire` (single + uniform-length batched).
 * ``ops``            -- jit'd public wrappers; ``ref`` -- pure-jnp oracles.
 
 All entry points take ``interpret: bool | None = None`` and autodetect the
@@ -21,6 +24,7 @@ perf tests.
 """
 
 from repro.core.selection import PASSES, resolve_interpret
+from .bitpack import pack_bits_ref, pack_bits_words, pack_bits_words_batched
 from .hist_select import (hist_topk_threshold, hist_topk_threshold_batched,
                           magnitude_histogram, magnitude_histogram_batched)
 from .ops import (stc_compress_batch, stc_compress_kernel, stc_compress_ref,
@@ -39,6 +43,9 @@ __all__ = [
     "magnitude_histogram_batched",
     "stc_apply",
     "stc_apply_batched",
+    "pack_bits_words",
+    "pack_bits_words_batched",
+    "pack_bits_ref",
     "PASSES",
     "resolve_interpret",
 ]

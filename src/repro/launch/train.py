@@ -44,8 +44,50 @@ from repro.models.config import ModelConfig
 from repro.sharding.rules import (batch_spec, fit_spec, param_shardings,
                                   param_specs)
 
-__all__ = ["TrainConfig", "codec_for", "init_train_state", "make_train_step",
-           "state_shardings", "batch_shardings"]
+__all__ = ["TrainConfig", "WireLedger", "codec_for", "init_train_state",
+           "make_train_step", "state_shardings", "batch_shardings"]
+
+
+class WireLedger:
+    """Host-side measured-bits accounting for the mesh trainer.
+
+    Feed it the ``(msgs_tree, global_delta_tree)`` extra output of a
+    ``measure_wire=True`` train step; it serializes every client's message
+    and the downstream update through the codec's wire format
+    (:mod:`repro.core.wire`) and accumulates EXACT bits, alongside the
+    analytic Eq. 1 model as a cross-check.  Codecs without a wire format
+    fall back to analytic in both columns.
+    """
+
+    def __init__(self, codec: Codec, numel: int):
+        self.codec, self.numel = codec, numel
+        self.rounds = 0
+        self.bits_up = self.bits_down = 0.0
+        self.bits_up_analytic = self.bits_down_analytic = 0.0
+
+    def record_round(self, msgs_tree, global_delta_tree) -> None:
+        import numpy as np
+        leaves = [np.asarray(l) for l in jax.tree.leaves(msgs_tree)]
+        n_clients = leaves[0].shape[0]
+        msgs = np.concatenate(
+            [l.reshape(n_clients, -1).astype(np.float32) for l in leaves],
+            axis=1)
+        gd = np.concatenate(
+            [np.asarray(l).reshape(-1).astype(np.float32)
+             for l in jax.tree.leaves(global_delta_tree)])
+        self.bits_up += self.codec.measured_upload_bits(msgs)
+        self.bits_down += self.codec.measured_download_bits(
+            gd, n_participating=n_clients)
+        self.bits_up_analytic += n_clients * self.codec.upload_bits(self.numel)
+        self.bits_down_analytic += self.codec.download_bits(
+            self.numel, n_participating=n_clients)
+        self.rounds += 1
+
+    def summary(self) -> dict:
+        return {"rounds": self.rounds, "bits_up": self.bits_up,
+                "bits_down": self.bits_down,
+                "bits_up_analytic": self.bits_up_analytic,
+                "bits_down_analytic": self.bits_down_analytic}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +101,9 @@ class TrainConfig:
     local_iters: int = 1            # fedavg delay period n
     compute_dtype: Any = jnp.bfloat16
     stc_iters: int = 32             # k-selection bisection rounds (§Perf lever)
+    measure_wire: bool = False      # also return (msgs, global_delta) trees
+                                    # so a host WireLedger can account the
+                                    # REAL serialized bits per round
 
 
 def codec_for(tc: TrainConfig) -> Codec:
@@ -226,6 +271,11 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
             lambda p, d: (p.astype(jnp.float32) +
                           d.astype(jnp.float32)).astype(p.dtype),
             params, global_delta)
+        if tc.measure_wire:
+            # per-client message (leading client axis) + the replicated
+            # downstream update, for host-side WireLedger accounting
+            wire_out = (jax.tree.map(lambda x: x[None], msg), global_delta)
+            return new_state, metrics, wire_out
         return new_state, metrics
 
     if not ca:
@@ -241,9 +291,7 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
     if codec.has_server_state():
         state_specs_in["server_res"] = P()
         out_specs_state["server_res"] = P()
-    # momentum specs added dynamically at call time via same prefix trick
-    in_specs = (state_specs_in, P(ca))
-    out_specs = (out_specs_state, P())
+    # momentum specs are added dynamically at call time (same prefix trick)
 
     def wrapped(state, batch):
         specs_in = dict(state_specs_in)
@@ -251,17 +299,19 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         if "momentum" in state:
             specs_in["momentum"] = P(ca)
             specs_out["momentum"] = P(ca)
+        outs = ((specs_out, P(), (P(ca), P())) if tc.measure_wire
+                else (specs_out, P()))
         # NOTE: partial-manual shard_map must run through jit (the eager impl
         # path mishandles check_vma=False with auto axes in jax 0.8).
         if hasattr(jax, "shard_map"):
             f = jax.shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
-                              out_specs=(specs_out, P()),
+                              out_specs=outs,
                               axis_names=set(ca), check_vma=False)
         else:  # jax <= 0.4.x spelling: manual axes via the auto-complement
             from jax.experimental.shard_map import shard_map
             auto = frozenset(mesh.axis_names) - set(ca)
             f = shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
-                          out_specs=(specs_out, P()), check_rep=False,
+                          out_specs=outs, check_rep=False,
                           auto=auto)
         return f(state, batch)
 
@@ -284,6 +334,9 @@ def main():
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--protocol", default="stc")
+    ap.add_argument("--measure-wire", action="store_true",
+                    help="serialize every message through the real wire "
+                         "format and print measured vs analytic bits")
     args = ap.parse_args()
 
     if len(jax.devices()) < 4:
@@ -292,7 +345,7 @@ def main():
     mesh = make_debug_mesh(data=2, model=2)
     cfg = get_smoke_config(args.arch)
     tc = TrainConfig(protocol=args.protocol, lr=0.05, sparsity_up=1 / 50,
-                     sparsity_down=1 / 50)
+                     sparsity_down=1 / 50, measure_wire=args.measure_wire)
     state = init_train_state(cfg, tc, n_clients=2, key=jax.random.PRNGKey(0))
 
     toks = make_lm_tokens(n_tokens=4 * 128 + 1, vocab=cfg.vocab_size)
@@ -305,12 +358,26 @@ def main():
         batch["prefix"] = jnp.zeros((4, cfg.n_prefix_tokens, cfg.d_model),
                                     jnp.float32)
 
-    with jax.set_mesh(mesh):
+    ledger = WireLedger(codec_for(tc), cfg.param_count())
+    # jax >= 0.8 spells the ambient mesh jax.set_mesh; 0.4.x enters the Mesh
+    set_mesh = getattr(jax, "set_mesh", None)
+    with (set_mesh(mesh) if set_mesh is not None else mesh):
         step = make_train_step(cfg, mesh, tc)
         for i in range(args.steps):
-            state, metrics = step(state, batch)
+            if tc.measure_wire:
+                state, metrics, (msgs, gd) = step(state, batch)
+                ledger.record_round(msgs, gd)
+            else:
+                state, metrics = step(state, batch)
             print(f"step {i}: loss={float(metrics['loss']):.4f}",
                   {k: int(v) for k, v in metrics.items() if k != "loss"})
+    if tc.measure_wire:
+        s = ledger.summary()
+        print(f"wire ledger over {s['rounds']} rounds: "
+              f"up {s['bits_up']/8e6:.3f} MB (analytic "
+              f"{s['bits_up_analytic']/8e6:.3f}), down "
+              f"{s['bits_down']/8e6:.3f} MB (analytic "
+              f"{s['bits_down_analytic']/8e6:.3f})")
 
 
 if __name__ == "__main__":

@@ -52,30 +52,49 @@ class TestCodec:
     @settings(max_examples=30, deadline=None)
     def test_roundtrip(self, n, p, seed):
         x, _ = self._random_ternary(n, p, seed)
-        bits, mu, n_out = golomb.encode_ternary(x, p)
-        dec = golomb.decode_ternary(bits, mu, n_out, p)
+        payload, bit_len, mu, n_out = golomb.encode_ternary(x, p)
+        dec = golomb.decode_ternary(payload, bit_len, mu, n_out, p)
         np.testing.assert_allclose(dec, x, atol=1e-6)
 
     def test_empty_tensor(self):
         x = np.zeros(100, np.float32)
-        bits, mu, n = golomb.encode_ternary(x, 0.01)
-        assert len(bits) == 0
-        dec = golomb.decode_ternary(bits, mu, n, 0.01)
+        payload, bit_len, mu, n = golomb.encode_ternary(x, 0.01)
+        assert bit_len == 0 and len(payload) == 0
+        dec = golomb.decode_ternary(payload, bit_len, mu, n, 0.01)
         np.testing.assert_array_equal(dec, x)
+
+    def test_payload_is_packed_bytes(self):
+        """Satellite fix: payload is bit-packed uint8 bytes (ceil(bits/8)),
+        not the old one-BIT-per-uint8 blowup."""
+        x, _ = self._random_ternary(4096, 0.05, seed=11)
+        payload, bit_len, _, _ = golomb.encode_ternary(x, 0.05)
+        assert payload.dtype == np.uint8
+        assert len(payload) == (bit_len + 7) // 8
+        # MSB-first convention: re-unpacking must give bit_len used bits
+        assert int(np.unpackbits(payload)[bit_len:].sum()) == 0
 
     def test_measured_bits_match_analytic(self):
         """Real bitstream length ≈ Eq. 17 expectation (random sparsity)."""
         n, p = 200_000, 0.01
         x, _ = self._random_ternary(n, p, seed=3)
-        bits, _, _ = golomb.encode_ternary(x, p)
+        _, bit_len, _, _ = golomb.encode_ternary(x, p)
         k = int(n * p)
         expected = k * (golomb.golomb_position_bits(p) + 1.0)
-        assert len(bits) == pytest.approx(expected, rel=0.02)
+        assert bit_len == pytest.approx(expected, rel=0.02)
+
+    def test_stream_bound_holds(self):
+        """stc_stream_bound_bits is a TRUE ceiling on the measured stream."""
+        for seed, p in [(3, 0.01), (4, 0.05), (5, 0.2)]:
+            n = 30_000
+            x, _ = self._random_ternary(n, p, seed)
+            _, bit_len, _, _ = golomb.encode_ternary(x, p)
+            nnz = int(np.count_nonzero(x))
+            assert bit_len + 32 <= golomb.stc_stream_bound_bits(n, nnz, p)
 
     def test_dense_edge(self):
         """p close to 1: gaps all 1, codec must still roundtrip."""
         x = np.ones(64, np.float32) * 0.5
         x[::7] *= -1
-        bits, mu, n = golomb.encode_ternary(x, 0.9)
-        dec = golomb.decode_ternary(bits, mu, n, 0.9)
+        payload, bit_len, mu, n = golomb.encode_ternary(x, 0.9)
+        dec = golomb.decode_ternary(payload, bit_len, mu, n, 0.9)
         np.testing.assert_allclose(dec, x, atol=1e-6)

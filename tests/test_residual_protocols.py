@@ -104,6 +104,12 @@ class TestProtocols:
         p = make_protocol("stc", sparsity_up=0.02, sparsity_down=0.02)
         st_ = p.init_client_state(400)
         msg, _, _ = p.client_compress(_rand(400, 9), st_)
-        wire, mu, n = encode_ternary(np.asarray(msg), p.sparsity_up)
-        back = decode_ternary(wire, mu, n, p.sparsity_up)
+        payload, bit_len, mu, n = encode_ternary(np.asarray(msg),
+                                                 p.sparsity_up)
+        back = decode_ternary(payload, bit_len, mu, n, p.sparsity_up)
         np.testing.assert_allclose(back, np.asarray(msg), rtol=1e-5, atol=1e-7)
+        # the codec-level wire API is the same stream
+        m = p.encode_wire(np.asarray(msg), direction="up")
+        assert m.bit_len == bit_len
+        np.testing.assert_allclose(p.decode_wire(m, direction="up"),
+                                   np.asarray(msg), rtol=1e-5, atol=1e-7)

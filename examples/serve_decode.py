@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.models import (decode_step, encode_frames, forward, init_cache,
+from repro.models import (decode_step, encode_frames, init_cache,
                           init_model)
 
 

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""CI bench-regression gate: fresh bench rows vs the committed baseline.
+
+    python scripts/check_bench.py [--ref HEAD] [--tolerance 2.0] [files...]
+
+After the slow lane reruns ``python -m benchmarks.run`` (which overwrites
+``benchmarks/BENCH_*.json`` in the working tree), this script compares the
+fresh TIMING rows on disk against the committed baseline at ``--ref``
+(``git show REF:path``) and fails -- exit 1 -- if any matched row's fresh
+median exceeds ``tolerance`` x the baseline median.  Rows present on only
+one side are reported but never fail the gate (new/renamed benches must not
+brick CI), and only timing files (unit == "us") gate: quality files like
+``BENCH_async.json`` carry accuracies/bit counts where "2x" is meaningless.
+
+Names appearing multiple times in one file are median-reduced first, so a
+bench may emit repeated measurements of the same row.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json")
+
+
+def row_value(row: dict) -> float:
+    """A bench row's scalar, whatever key vintage wrote it."""
+    return float(row["us"] if "us" in row else row["value"])
+
+
+def medians_by_name(payload: dict) -> dict[str, float]:
+    """name -> median value over a payload's (possibly repeated) rows."""
+    by_name: dict[str, list[float]] = {}
+    for row in payload.get("rows", []):
+        by_name.setdefault(row["name"], []).append(row_value(row))
+    return {name: statistics.median(vals) for name, vals in by_name.items()}
+
+
+def compare(baseline: dict[str, float], fresh: dict[str, float],
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (report_lines, regression_lines)."""
+    report, regressions = [], []
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in fresh:
+            report.append(f"  MISSING {name} (baseline {baseline[name]:.1f})")
+            continue
+        if name not in baseline:
+            report.append(f"  NEW     {name} = {fresh[name]:.1f}")
+            continue
+        base, cur = baseline[name], fresh[name]
+        ratio = cur / base if base > 0 else float("inf")
+        line = f"  {name}: {base:.1f} -> {cur:.1f}  ({ratio:.2f}x)"
+        if ratio > tolerance:
+            regressions.append(line)
+            report.append("X" + line[1:])
+        else:
+            report.append(line)
+    return report, regressions
+
+
+def load_baseline(path: str, ref: str) -> dict | None:
+    """The committed payload at ``ref`` (None when absent there)."""
+    proc = subprocess.run(["git", "show", f"{ref}:{path}"], cwd=REPO,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES),
+                    help="repo-relative bench JSON files to gate")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline (default HEAD)")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="fail when fresh/baseline exceeds this (default 2x)")
+    args = ap.parse_args(argv)
+
+    files = args.files or list(DEFAULT_FILES)
+    failed = False
+    for rel in files:
+        full = os.path.join(REPO, rel)
+        print(f"== {rel} (baseline {args.ref}, tolerance "
+              f"{args.tolerance:g}x) ==")
+        if not os.path.exists(full):
+            print("  no fresh file on disk; did benchmarks.run run? SKIP")
+            continue
+        with open(full) as f:
+            fresh_payload = json.load(f)
+        baseline_payload = load_baseline(rel, args.ref)
+        if baseline_payload is None:
+            print(f"  no committed baseline at {args.ref}; SKIP (first run)")
+            continue
+        if fresh_payload.get("unit", "us") != "us":
+            print("  non-timing file (unit != us); report only, never gates")
+        report, regressions = compare(medians_by_name(baseline_payload),
+                                      medians_by_name(fresh_payload),
+                                      args.tolerance)
+        print("\n".join(report))
+        if regressions and fresh_payload.get("unit", "us") == "us":
+            failed = True
+            print(f"  -> {len(regressions)} row(s) regressed beyond "
+                  f"{args.tolerance:g}x")
+    if failed:
+        print("bench regression gate: FAIL")
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,40 @@
 #!/usr/bin/env bash
-# Fast CI lane: the full non-slow test suite + a 2-round end-to-end smoke of
-# every registered protocol codec.  (The slow lane is `pytest -m slow` plus
-# `python -m benchmarks.run`.)
+# Fast CI lane: lint + the full non-slow test suite + a 2-round end-to-end
+# smoke of every registered protocol codec.  (The slow lane is
+# `pytest -m slow` plus `python -m benchmarks.run` gated by
+# `scripts/check_bench.py` -- see .github/workflows/ci.yml.)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# Surface WHICH stage broke: every stage announces itself, and the EXIT trap
+# names the in-flight stage on any nonzero exit, so a red lane is readable
+# from the last two log lines instead of a scrollback hunt.
+STAGE="setup"
+on_exit() {
+    code=$?
+    if [ "$code" -ne 0 ]; then
+        echo "ci_fast: FAILED in stage [$STAGE] (exit $code)" >&2
+    else
+        echo "ci_fast: all stages passed"
+    fi
+}
+trap on_exit EXIT
+stage() { STAGE="$1"; echo "== ci_fast stage: $1 =="; }
+
+stage lint
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "(ruff not installed; skipping lint -- CI installs it via requirements-ci.txt)"
+fi
+
+stage pytest-fast
 python -m pytest -m "not slow" -q
+
+stage protocol-smoke
 python scripts/smoke_protocols.py
+
+stage done

@@ -136,13 +136,21 @@ def sign_compress(x: jnp.ndarray, step: float) -> tuple[jnp.ndarray, Compression
     return out, stats
 
 
-def majority_vote_sign(stacked_signs: jnp.ndarray, step: float) -> jnp.ndarray:
+def majority_vote_sign(stacked_signs: jnp.ndarray, step: float,
+                       weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """signSGD-with-majority-vote server aggregation (Bernstein et al. '18).
 
     ``stacked_signs``: (n_clients, ...) tensor of ±step (or ±1) client updates.
-    Returns the ±step majority direction per coordinate.
+    Returns the ±step majority direction per coordinate.  ``weights`` (a
+    per-client vector, e.g. participation-mask × staleness decay) turns the
+    vote into a weighted vote -- an absent/zero-weight client simply does not
+    vote; ``weights=None`` is the plain unweighted vote.
     """
-    vote = jnp.sign(jnp.sum(jnp.sign(stacked_signs), axis=0))
+    signs = jnp.sign(stacked_signs)
+    if weights is not None:
+        w = jnp.asarray(weights, signs.dtype)
+        signs = signs * w.reshape((-1,) + (1,) * (signs.ndim - 1))
+    vote = jnp.sign(jnp.sum(signs, axis=0))
     return (step * vote).astype(stacked_signs.dtype)
 
 

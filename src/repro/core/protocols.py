@@ -18,9 +18,14 @@ The interface (flat-vector path, used by :class:`repro.fed.FederatedTrainer`):
   stats)`` with a leading client axis on every output.  The default
   implementation vmaps the single-vector :meth:`Codec.encode`; codecs with a
   genuinely batched implementation (STC's Pallas kernels) override it.
-* ``aggregate(msgs, server_state)`` -- server aggregation of the stacked
-  ``(P, numel)`` messages plus downstream compression; returns
-  ``(global_delta, server_state, stats)``.
+* ``aggregate(msgs, server_state, mask=None, staleness=None)`` -- server
+  aggregation of the stacked ``(P, numel)`` messages plus downstream
+  compression; returns ``(global_delta, server_state, stats)``.  ``mask`` is
+  a per-message participation mask and ``staleness`` the per-message age in
+  rounds (both ``(P,)``), used by the buffered/async trainer: the codec-level
+  default combines arrived messages with the staleness-decayed weighted mean
+  of :meth:`Codec.combine` (``signsgd`` instead casts a weighted majority
+  vote).  ``mask=None`` (the synchronous trainer) is the plain mean.
 * ``upload_bits(numel)`` / ``download_bits(numel, n_participating)`` --
   analytic bit ledger (Eq. 1), host-side floats.
 * ``encode_wire`` / ``decode_wire`` / ``encode_wire_batch`` +
@@ -170,6 +175,10 @@ class Codec:
     error_feedback: ClassVar[bool] = False
 
     local_iters: int = 1                    # n (communication delay period)
+    # staleness-weighted combining (buffered/async aggregation): an update
+    # that is s rounds old enters the weighted mean with weight (1+s)^-decay
+    # (FedBuff-style polynomial decay; 0.0 = ignore staleness entirely)
+    staleness_decay: float = 0.5
 
     # -- state ------------------------------------------------------------
     def init_client_state(self, numel: int):
@@ -190,9 +199,44 @@ class Codec:
         return jax.vmap(lambda d, s: self.encode(d, s))(deltas, states)
 
     # -- server side (aggregation + downstream) -----------------------------
-    def aggregate(self, msgs: jnp.ndarray, server_state):
-        """Aggregate (P, numel) messages. Returns (global_delta, state, stats)."""
-        mean = jnp.mean(msgs, axis=0)
+    def participation_weights(self, mask, staleness=None) -> jnp.ndarray:
+        """Per-message combining weights ``w_i = mask_i * (1+s_i)^-decay``.
+
+        ``mask`` is the (P,) participation mask (1 = arrived, 0 = absent /
+        padding) and ``staleness`` the (P,) per-message age in rounds; with
+        ``staleness=None`` (or all zeros) the weights are exactly the mask,
+        so an all-ones mask reproduces the synchronous combine bit for bit.
+        """
+        w = jnp.asarray(mask, jnp.float32)
+        if staleness is not None:
+            decay = (1.0 + jnp.asarray(staleness, jnp.float32)) \
+                ** (-self.staleness_decay)
+            w = w * decay
+        return w
+
+    def combine(self, msgs: jnp.ndarray, mask=None, staleness=None):
+        """Combine (P, ...) messages over the client axis: the plain mean when
+        unmasked, otherwise the staleness-weighted mean over the arrived
+        messages (weight mass 0 -- nothing arrived -- combines to zero)."""
+        if mask is None and staleness is None:
+            return jnp.mean(msgs, axis=0)
+        if mask is None:
+            mask = jnp.ones(msgs.shape[0], jnp.float32)
+        w = self.participation_weights(mask, staleness)
+        total = jnp.sum(w)
+        denom = jnp.where(total > 0, total, 1.0)
+        wb = w.reshape((msgs.shape[0],) + (1,) * (msgs.ndim - 1))
+        return jnp.sum(msgs * wb, axis=0) / denom
+
+    def aggregate(self, msgs: jnp.ndarray, server_state, mask=None,
+                  staleness=None):
+        """Aggregate (P, numel) messages. Returns (global_delta, state, stats).
+
+        ``mask`` / ``staleness`` (both (P,), optional) come from the buffered
+        trainer: only ``mask>0`` rows count, each weighted by the codec's
+        staleness decay (see :meth:`combine`).  ``None`` = synchronous round.
+        """
+        mean = self.combine(msgs, mask, staleness)
         out, stats = _identity(mean)
         return out, server_state, stats
 
@@ -291,13 +335,32 @@ class Codec:
         """
         return delta, residual, {}
 
-    def tree_reduce(self, msgs, axes, n_clients: int):
+    def tree_reduce(self, msgs, axes, n_clients: int, mask=None,
+                    staleness=None):
         """The one protocol-level collective: combine per-client message trees
-        over the manual mesh axes ``axes`` (mean by default)."""
+        over the manual mesh axes ``axes`` (mean by default).
+
+        ``mask`` / ``staleness`` are THIS shard's slice of the per-client
+        participation mask and staleness vectors (shape ``(local_clients,)``
+        inside shard_map): a masked-out shard contributes zero weight, so a
+        dropped client no longer stalls or skews the step, and the weighted
+        psum renormalizes by the total arrived weight mass.
+        """
+        if mask is None and staleness is None:
+            if axes:
+                return jax.tree.map(
+                    lambda t: jax.lax.psum(t, axes) / n_clients, msgs)
+            return msgs
+        if mask is None:
+            mask = jnp.ones((1,), jnp.float32)
+        w = jnp.sum(self.participation_weights(mask, staleness))
         if axes:
+            total = jax.lax.psum(w, axes)
+            denom = jnp.where(total > 0, total, 1.0)
             return jax.tree.map(
-                lambda t: jax.lax.psum(t, axes) / n_clients, msgs)
-        return msgs
+                lambda t: jax.lax.psum(w * t, axes) / denom, msgs)
+        denom = jnp.where(w > 0, w, 1.0)
+        return jax.tree.map(lambda t: w * t / denom, msgs)
 
     def tree_decode(self, combined, residual, *, numel: int, iters: int = 32):
         """Server-side downstream compression of the combined tree.  Returns
@@ -390,8 +453,13 @@ class SignSGDCodec(Codec):
     def wire_bound_bits(self, numel, nnz, direction="up"):
         return float(numel)                 # measured == analytic, exactly
 
-    def aggregate(self, msgs, server_state):
-        out = majority_vote_sign(msgs, self.sign_step)
+    def aggregate(self, msgs, server_state, mask=None, staleness=None):
+        weights = None
+        if mask is not None or staleness is not None:
+            if mask is None:
+                mask = jnp.ones(msgs.shape[0], jnp.float32)
+            weights = self.participation_weights(mask, staleness)
+        out = majority_vote_sign(msgs, self.sign_step, weights=weights)
         _, stats = _identity(out)
         stats = stats._replace(mu=jnp.asarray(self.sign_step))
         return out, server_state, stats
@@ -407,11 +475,21 @@ class SignSGDCodec(Codec):
         from .distributed import sign_compress_tree
         return sign_compress_tree(delta, self.sign_step), residual, {}
 
-    def tree_reduce(self, msgs, axes, n_clients):
+    def tree_reduce(self, msgs, axes, n_clients, mask=None, staleness=None):
+        if mask is None and staleness is None:
+            if axes:
+                return jax.tree.map(
+                    lambda t: jax.lax.psum(jnp.sign(t), axes), msgs)
+            return jax.tree.map(jnp.sign, msgs)
+        # weighted vote: an absent shard casts no vote (weight 0); no
+        # renormalization -- tree_decode takes the sign of the tally anyway
+        if mask is None:
+            mask = jnp.ones((1,), jnp.float32)
+        w = jnp.sum(self.participation_weights(mask, staleness))
         if axes:
             return jax.tree.map(
-                lambda t: jax.lax.psum(jnp.sign(t), axes), msgs)
-        return jax.tree.map(jnp.sign, msgs)
+                lambda t: jax.lax.psum(w * jnp.sign(t), axes), msgs)
+        return jax.tree.map(lambda t: w * jnp.sign(t), msgs)
 
     def tree_decode(self, combined, residual, *, numel, iters=32):
         out = jax.tree.map(
@@ -520,9 +598,9 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
             deltas, states.residual, self.sparsity_up)
         return msgs, ResidualState(residual=new_res), stats
 
-    def aggregate(self, msgs, server_state):
+    def aggregate(self, msgs, server_state, mask=None, staleness=None):
         be = get_stc_backend(self.backend)
-        mean = jnp.mean(msgs, axis=0)
+        mean = self.combine(msgs, mask, staleness)
         out, new_res, stats = be.compress_with_residual(
             mean, server_state.residual, self.sparsity_down)
         return out, ResidualState(residual=new_res), stats
@@ -573,8 +651,8 @@ class TernQuantCodec(_ErrorFeedbackMixin, Codec):
         return compress_with_feedback(
             delta, state, lambda v: ternary_quantize(v, self.theta))
 
-    def aggregate(self, msgs, server_state):
-        mean = jnp.mean(msgs, axis=0)
+    def aggregate(self, msgs, server_state, mask=None, staleness=None):
+        mean = self.combine(msgs, mask, staleness)
         return compress_with_feedback(
             mean, server_state, lambda v: ternary_quantize(v, self.theta))
 

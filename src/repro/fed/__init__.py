@@ -1,7 +1,10 @@
-"""Federated runtime: environment (Alg. 5 splits), trainer (Alg. 2 loop)."""
+"""Federated runtime: environment (Alg. 5 splits), trainers (Alg. 2 loop,
+synchronous + deadline-buffered async), client arrival simulation."""
 
+from .arrivals import Arrival, ArrivalSimulator, LatencyModel
 from .environment import FedEnvironment, split_data, volume_fractions
-from .loop import FederatedTrainer, TrainerConfig
+from .loop import BufferedFederatedTrainer, FederatedTrainer, TrainerConfig
 
 __all__ = ["FedEnvironment", "split_data", "volume_fractions",
-           "FederatedTrainer", "TrainerConfig"]
+           "FederatedTrainer", "BufferedFederatedTrainer", "TrainerConfig",
+           "Arrival", "ArrivalSimulator", "LatencyModel"]

@@ -1,18 +1,36 @@
-"""Federated training loop -- Algorithm 2 of the paper, end to end.
+"""Federated training loops -- Algorithm 2 of the paper, end to end.
 
-The round computation (local SGD on every participating client, upstream
-compression with error feedback, server aggregation, downstream compression,
-global apply) is ONE jit'd function, vmapped over the participating clients.
+Two trainers share one round machinery, split into two jitted phases so the
+synchronous and buffered/async modes are the *same compiled computation*:
+
+* ``encode`` -- local SGD on every dispatched client + upstream compression
+  with error feedback (one vmapped jit);
+* ``apply`` -- server aggregation (the codec's masked, staleness-weighted
+  ``aggregate``), downstream compression and the global parameter update.
+
+:class:`FederatedTrainer` runs them back to back with an all-ones mask --
+every sampled client reports before the server moves.
+:class:`BufferedFederatedTrainer` puts the :mod:`repro.fed.arrivals`
+simulator between them: clients encode against the model at dispatch time,
+the server aggregates whatever landed by the round deadline (on-time updates
+plus buffered stragglers, staleness-weighted), and messages staler than the
+buffer horizon are dropped.  With ``deadline=inf`` the buffered trainer
+reproduces the synchronous one bit for bit (same jitted phases, same
+inputs) -- regression-tested in tests/test_async.py.
+
 Partial participation, the server-side update cache (Sec. V-B) and the bit
 ledger live in the host driver.  When the codec has a wire format the ledger
-is MEASURED -- every round's messages are actually serialized through
-:mod:`repro.core.wire` and the exact stream lengths accumulated -- with the
-analytic Eq. 1 model kept in the ``*_analytic`` columns as a cross-check.
+is MEASURED -- every message is serialized through :mod:`repro.core.wire`
+when it reaches the server and the exact stream lengths accumulated -- with
+the analytic Eq. 1 model kept in the ``*_analytic`` columns as a
+cross-check.
 
-The trainer is protocol-agnostic: it talks to the codec ONLY through the
+The trainers are protocol-agnostic: they talk to the codec ONLY through the
 :class:`repro.core.protocols.Codec` interface (``init_*_state`` /
 ``encode_batch`` / ``aggregate`` / ``upload_bits`` / ``download_bits``), so
-any codec registered via ``register_protocol`` runs here unchanged.
+any codec registered via ``register_protocol`` runs here unchanged.  A codec
+whose ``aggregate`` predates the mask/staleness kwargs still works in the
+synchronous trainer; buffered aggregation requires the masked API.
 
 Works with any model from ``repro.models.paper_models`` (or any
 (init_fn, apply_fn) pair with ``apply(params, x) -> logits``).
@@ -21,7 +39,9 @@ Works with any model from ``repro.models.paper_models`` (or any
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import inspect
+import math
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +52,10 @@ from repro.core.compression import flatten_pytree, unflatten_pytree
 from repro.core.protocols import Codec
 from repro.core.residual import scatter_states, stack_states, take_states
 from repro.data.synthetic import Dataset
+from repro.fed.arrivals import ArrivalSimulator, LatencyModel
 from repro.fed.environment import FedEnvironment, split_data
 
-__all__ = ["FederatedTrainer", "TrainerConfig"]
+__all__ = ["FederatedTrainer", "BufferedFederatedTrainer", "TrainerConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,8 +77,20 @@ def _cross_entropy(logits, y):
     return jnp.mean(logz - gold)
 
 
+def _codec_accepts_mask(codec: Codec) -> bool:
+    """True when ``codec.aggregate`` takes the mask/staleness kwargs (the
+    masked Codec API); legacy 2-argument overrides still run synchronously."""
+    try:
+        params = inspect.signature(codec.aggregate).parameters
+    except (TypeError, ValueError):  # builtins / C callables: assume legacy
+        return False
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True
+    return "mask" in params and "staleness" in params
+
+
 class FederatedTrainer:
-    """Simulates Algorithm 2 on one host."""
+    """Simulates Algorithm 2 on one host (fully synchronous rounds)."""
 
     def __init__(self, model: tuple[Callable, Callable], train: Dataset,
                  test: Dataset, env: FedEnvironment, protocol: Codec,
@@ -105,15 +138,18 @@ class FederatedTrainer:
         self.wire_log: list[dict] = []   # per-round measured-vs-bound rows
         self.history: list[dict] = []
 
-        self._round_fn = self._build_round_fn()
+        self._accepts_mask = _codec_accepts_mask(protocol)
+        self._encode_fn = self._build_encode_fn()
+        self._apply_fn = self._build_apply_fn()
         self._eval_fn = jax.jit(self._eval_batch)
 
     # ------------------------------------------------------------------ jit
-    def _build_round_fn(self):
+    def _build_encode_fn(self):
+        """Client phase: local SGD on the dispatched cohort + upstream
+        compression, one vmapped jit.  Returns (msgs, new_mom, new_cstate)."""
         codec = self.protocol
         lr = self.tcfg.lr
         mom = self.tcfg.momentum
-        measure = self.measure_bits     # static: gates the msgs output
         spec = self.spec
         # momentum stays an fp32 pytree inside the scan (no per-step
         # flatten/unflatten round-trip); it is flattened once per round to
@@ -147,22 +183,32 @@ class FederatedTrainer:
             delta = flatten_pytree(p_final)[0] - params_vec
             return delta, flatten_pytree(v_final)[0]
 
-        def round_fn(params_vec, server_state, mom_sel, cstate_sel, xs, ys):
+        def encode_fn(params_vec, mom_sel, cstate_sel, xs, ys):
             """xs: (P, iters, b, ...); ys: (P, iters, b)."""
             deltas, new_mom = jax.vmap(
                 lambda m, x, y: local_update(params_vec, m, x, y)
             )(mom_sel, xs, ys)
-            # the entire protocol is these two codec calls
             msgs, new_cstate, _ = codec.encode_batch(deltas, cstate_sel)
-            global_delta, server_state, _ = codec.aggregate(msgs, server_state)
-            new_params = params_vec + global_delta
-            # the (P, numel) msgs buffer is only an output when the measured
-            # ledger will actually serialize it (None otherwise: no transfer,
-            # no extra live buffer)
-            return (new_params, server_state, new_mom, new_cstate,
-                    global_delta, msgs if measure else None)
+            return msgs, new_mom, new_cstate
 
-        return jax.jit(round_fn)
+        return jax.jit(encode_fn)
+
+    def _build_apply_fn(self):
+        """Server phase: masked staleness-weighted aggregation + downstream
+        compression + the global parameter update, one jit."""
+        codec = self.protocol
+        accepts_mask = self._accepts_mask
+
+        def apply_fn(params_vec, server_state, msgs, mask, staleness):
+            if accepts_mask:
+                global_delta, server_state, _ = codec.aggregate(
+                    msgs, server_state, mask=mask, staleness=staleness)
+            else:   # legacy codec (pre-mask API): synchronous mean only
+                global_delta, server_state, _ = codec.aggregate(
+                    msgs, server_state)
+            return params_vec + global_delta, server_state, global_delta
+
+        return jax.jit(apply_fn)
 
     def _eval_batch(self, params_vec, x, y):
         params = unflatten_pytree(params_vec, self.spec)
@@ -183,20 +229,35 @@ class FederatedTrainer:
             ys.append(self.train.y[idx].reshape(local_iters, b))
         return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
 
+    def _dispatch(self, sel, xs, ys):
+        """Run the cohort's local updates + encoding against the CURRENT
+        model; client-side state (momentum, residuals) commits at dispatch."""
+        mom_sel = self.client_mom[sel]
+        cstate_sel = take_states(self.client_state, sel)
+        msgs, new_mom, new_cstate = self._encode_fn(
+            self.params_vec, mom_sel, cstate_sel, xs, ys)
+        self.client_mom = self.client_mom.at[sel].set(new_mom)
+        self.client_state = scatter_states(self.client_state, sel, new_cstate)
+        return msgs
+
+    def _apply_update(self, msgs, mask, staleness):
+        """Aggregate + apply; returns the global delta (device array)."""
+        (self.params_vec, self.server_state,
+         global_delta) = self._apply_fn(self.params_vec, self.server_state,
+                                        msgs, jnp.asarray(mask, jnp.float32),
+                                        jnp.asarray(staleness, jnp.float32))
+        return global_delta
+
     def run_round(self):
         env, proto = self.env, self.protocol
         p = env.participants_per_round
         sel = self.rng.choice(env.n_clients, size=p, replace=False)
         xs, ys = self._sample_batches(sel, proto.local_iters)
 
-        mom_sel = self.client_mom[sel]
-        cstate_sel = take_states(self.client_state, sel)
-        (self.params_vec, self.server_state, new_mom, new_cstate,
-         global_delta, msgs) = self._round_fn(self.params_vec,
-                                              self.server_state, mom_sel,
-                                              cstate_sel, xs, ys)
-        self.client_mom = self.client_mom.at[sel].set(new_mom)
-        self.client_state = scatter_states(self.client_state, sel, new_cstate)
+        msgs = self._dispatch(sel, xs, ys)
+        global_delta = self._apply_update(
+            msgs, np.ones(p, np.float32), np.zeros(p, np.float32))
+        gd_np = np.asarray(global_delta)
 
         # ---- bit ledger + partial-participation sync cost ------------------
         # analytic (Eq. 1) columns always accumulate as the cross-check
@@ -204,7 +265,6 @@ class FederatedTrainer:
         per_update_analytic = proto.download_bits(self.numel,
                                                   n_participating=p)
         model_bits = 32.0 * self.numel
-        gd_np = np.asarray(global_delta)
         if self.measure_bits:
             batch = proto.encode_wire_batch(np.asarray(msgs), direction="up")
             up = proto.measured_batch_bits(batch)
@@ -244,6 +304,10 @@ class FederatedTrainer:
             "bits_down_per_update_bound": dn_bound,
         })
 
+    def _history_extra(self) -> dict:
+        """Trainer-specific columns appended to every history record."""
+        return {}
+
     def evaluate(self) -> float:
         n = len(self.test.y)
         bs = self.tcfg.eval_batch
@@ -269,8 +333,132 @@ class FederatedTrainer:
                     "bits_down_analytic": self.bits_down_analytic,
                     "measured": self.measure_bits,
                 }
+                rec.update(self._history_extra())
                 self.history.append(rec)
                 if verbose:
                     print(f"round {self.round:5d} acc={acc:.4f} "
                           f"upMB={self.bits_up/8e6:.1f}")
         return self.history
+
+
+class BufferedFederatedTrainer(FederatedTrainer):
+    """Deadline-based buffered (async) aggregation -- the low-participation
+    scaling mode the paper's §V regime calls for.
+
+    Per round: a fresh cohort is dispatched (downloading the current model:
+    downstream sync cost accounted here, through the ``UpdateCache``
+    staleness machinery), computes + encodes against the model *at dispatch
+    time*, and hands its messages to the :class:`ArrivalSimulator`.  The
+    server then aggregates everything that landed by this round's deadline
+    -- on-time updates plus stragglers buffered from earlier rounds -- via
+    the codec's masked ``aggregate``, each message weighted by the codec's
+    staleness decay.  Messages staler than ``max_staleness`` rounds are
+    dropped (their upload bits are still accounted: the bytes did reach the
+    server).  A round where nothing arrives leaves the model and the server
+    codec state untouched and uploads zero bits.
+
+    ``deadline=math.inf`` makes every update punctual: the trainer then
+    reproduces the synchronous :class:`FederatedTrainer` bit for bit (same
+    compiled phases, same inputs -- regression-tested).
+
+    Note the same client may be re-dispatched while a previous update is
+    still in flight (real buffered-FL systems usually forbid this; the
+    simulator allows it and error feedback simply evolves at each dispatch).
+    """
+
+    def __init__(self, model, train: Dataset, test: Dataset,
+                 env: FedEnvironment, protocol: Codec,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 latency: Optional[LatencyModel] = None,
+                 deadline: float = math.inf, max_staleness: int = 8):
+        super().__init__(model, train, test, env, protocol, tcfg)
+        if not self._accepts_mask:
+            raise TypeError(
+                f"codec {protocol.name!r} overrides aggregate() without the "
+                "mask/staleness parameters; buffered aggregation needs the "
+                "masked Codec API (see core.protocols.Codec.aggregate)")
+        self.deadline = float(deadline)
+        self.max_staleness = int(max_staleness)
+        self.sim = ArrivalSimulator(latency or LatencyModel(),
+                                    n_clients=env.n_clients,
+                                    deadline=deadline, seed=tcfg.seed + 2)
+        self.n_dropped = 0               # arrivals past the buffer horizon
+        self.arrival_log: list[dict] = []
+
+    def run_round(self):
+        env, proto = self.env, self.protocol
+        p = env.participants_per_round
+        sel = self.rng.choice(env.n_clients, size=p, replace=False)
+        xs, ys = self._sample_batches(sel, proto.local_iters)
+
+        msgs = self._dispatch(sel, xs, ys)
+        self.sim.dispatch(self.round, sel, list(np.asarray(msgs)))
+        arrivals = self.sim.collect(self.round)
+        kept = [a for a in arrivals
+                if self.round - a.sent_round <= self.max_staleness]
+        dropped = len(arrivals) - len(kept)
+        self.n_dropped += dropped
+
+        if kept:
+            # pad the aggregation buffer to a multiple of the cohort size:
+            # stable jit shapes (== p when everyone is on time), zero-weight
+            # padding rows are invisible to the masked aggregate
+            kpad = p * math.ceil(len(kept) / p)
+            buf = np.zeros((kpad, self.numel), np.float32)
+            mask = np.zeros(kpad, np.float32)
+            staleness = np.zeros(kpad, np.float32)
+            for i, a in enumerate(kept):
+                buf[i] = np.asarray(a.payload)
+                mask[i] = 1.0
+                staleness[i] = self.round - a.sent_round
+            global_delta = self._apply_update(jnp.asarray(buf), mask,
+                                              staleness)
+            gd_np = np.asarray(global_delta)
+        else:
+            # nothing reached the server: params + server codec state frozen
+            gd_np = np.zeros(self.numel, np.float32)
+
+        # ---- bit ledger ----------------------------------------------------
+        # upstream bits are accounted when the bytes REACH the server
+        # (including dropped stragglers); downstream sync cost at dispatch,
+        # when the cohort pulled the current model through the UpdateCache.
+        up_analytic = len(arrivals) * proto.upload_bits(self.numel)
+        per_update_analytic = proto.download_bits(self.numel,
+                                                  n_participating=p)
+        model_bits = 32.0 * self.numel
+        if self.measure_bits and arrivals:
+            arr = np.stack([np.asarray(a.payload) for a in arrivals])
+            batch = proto.encode_wire_batch(arr, direction="up")
+            up = proto.measured_batch_bits(batch)
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+            self._log_wire_round(batch, down_msg, up, per_update)
+        elif self.measure_bits:
+            up = 0.0        # zero arrivals -> zero upstream bits, no wire row
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+        else:
+            up, per_update = up_analytic, per_update_analytic
+        self.bits_up += up
+        self.bits_up_analytic += up_analytic
+        skipped = self.round - self.last_seen[sel]
+        self.bits_down += self.cache.sync_bits_batch(skipped, per_update,
+                                                     model_bits)
+        self.bits_down_analytic += self.cache.sync_bits_batch(
+            skipped, per_update_analytic, model_bits)
+        self.last_seen[sel] = self.round
+        self.cache.push(gd_np)
+        self.arrival_log.append({
+            "round": self.round, "dispatched": p, "arrived": len(arrivals),
+            "aggregated": len(kept), "dropped": dropped,
+            "staleness_max": max(
+                (self.round - a.sent_round for a in kept), default=0),
+            "pending": self.sim.pending_count(),
+        })
+        self.round += 1
+
+    def _history_extra(self) -> dict:
+        last = self.arrival_log[-1] if self.arrival_log else {}
+        return {"n_dropped": self.n_dropped,
+                "pending": self.sim.pending_count(),
+                "aggregated": last.get("aggregated", 0)}

@@ -10,7 +10,6 @@ SSM/hybrid (see DESIGN.md §Decode-shape coverage).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +17,7 @@ from jax.sharding import NamedSharding
 
 from repro.models import decode_step, forward, init_cache, init_model
 from repro.models.config import ModelConfig
-from repro.sharding.rules import (batch_spec, cache_specs, fit_spec,
-                                  param_shardings, tree_shardings)
+from repro.sharding.rules import cache_specs, fit_spec, param_shardings
 
 __all__ = ["make_prefill_step", "make_decode_step", "serve_state_structs"]
 

@@ -30,9 +30,8 @@ Run as a script for a CPU demo on a debug mesh:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.protocols import Codec, get_protocol_class
 from repro.models import init_model, lm_loss
 from repro.models.config import ModelConfig
-from repro.sharding.rules import (batch_spec, fit_spec, param_shardings,
-                                  param_specs)
+from repro.sharding.rules import batch_spec, fit_spec, param_specs
 
 __all__ = ["TrainConfig", "WireLedger", "codec_for", "init_train_state",
            "make_train_step", "state_shardings", "batch_shardings"]
@@ -65,22 +63,30 @@ class WireLedger:
         self.bits_up = self.bits_down = 0.0
         self.bits_up_analytic = self.bits_down_analytic = 0.0
 
-    def record_round(self, msgs_tree, global_delta_tree) -> None:
+    def record_round(self, msgs_tree, global_delta_tree, mask=None) -> None:
+        """Account one round.  ``mask`` (per-client 0/1, masked/async mode)
+        keeps the ledger honest under dropped shards: only messages that
+        actually reached the server count as upstream bits."""
         import numpy as np
-        leaves = [np.asarray(l) for l in jax.tree.leaves(msgs_tree)]
+        leaves = [np.asarray(leaf) for leaf in jax.tree.leaves(msgs_tree)]
         n_clients = leaves[0].shape[0]
         msgs = np.concatenate(
-            [l.reshape(n_clients, -1).astype(np.float32) for l in leaves],
-            axis=1)
+            [leaf.reshape(n_clients, -1).astype(np.float32)
+             for leaf in leaves], axis=1)
+        if mask is not None:
+            keep = np.asarray(mask, dtype=bool).reshape(-1)
+            msgs = msgs[keep]
+            n_clients = int(keep.sum())
         gd = np.concatenate(
-            [np.asarray(l).reshape(-1).astype(np.float32)
-             for l in jax.tree.leaves(global_delta_tree)])
-        self.bits_up += self.codec.measured_upload_bits(msgs)
+            [np.asarray(leaf).reshape(-1).astype(np.float32)
+             for leaf in jax.tree.leaves(global_delta_tree)])
+        if n_clients:
+            self.bits_up += self.codec.measured_upload_bits(msgs)
         self.bits_down += self.codec.measured_download_bits(
-            gd, n_participating=n_clients)
+            gd, n_participating=max(n_clients, 1))
         self.bits_up_analytic += n_clients * self.codec.upload_bits(self.numel)
         self.bits_down_analytic += self.codec.download_bits(
-            self.numel, n_participating=n_clients)
+            self.numel, n_participating=max(n_clients, 1))
         self.rounds += 1
 
     def summary(self) -> dict:
@@ -104,6 +110,12 @@ class TrainConfig:
     measure_wire: bool = False      # also return (msgs, global_delta) trees
                                     # so a host WireLedger can account the
                                     # REAL serialized bits per round
+    masked: bool = False            # async mode: train_step takes per-client
+                                    # (mask, staleness) vectors; a masked-out
+                                    # client's message gets zero weight in the
+                                    # tree_reduce collective and its residual/
+                                    # momentum stay frozen -- a dropped shard
+                                    # no longer stalls (or skews) the step
 
 
 def codec_for(tc: TrainConfig) -> Codec:
@@ -238,7 +250,7 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         delta = jax.tree.map(lambda u: -tc.lr * u.astype(jnp.float32), upd)
         return delta, mom, loss
 
-    def step_fn(state, batch):
+    def step_fn(state, batch, mask=None, staleness=None):
         params = state["params"]
         mom = None
         if "momentum" in state:
@@ -248,7 +260,15 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         metrics = {"loss": jax.lax.pmean(loss, ca) if ca else loss}
         new_state = dict(state)
         new_state["step"] = state["step"] + 1
+        # a masked-out (dropped) client's local state must not advance: its
+        # message never reached the server, so momentum/residual stay frozen
+        # until it participates again (mirrors the buffered fed trainer)
+        arrived = None if mask is None else jnp.sum(mask) > 0
         if mom is not None:
+            if arrived is not None:
+                mom = jax.tree.map(
+                    lambda new, old: jnp.where(arrived, new, old[0]),
+                    mom, state["momentum"])
             new_state["momentum"] = jax.tree.map(lambda x: x[None], mom)
 
         # ---- the entire protocol: three codec calls, zero dispatch ---------
@@ -257,11 +277,33 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         msg, new_cres, m_up = codec.tree_encode(delta, cres, numel=numel,
                                                 iters=tc.stc_iters)
         if "client_res" in state:
+            if arrived is not None:
+                new_cres = jax.tree.map(
+                    lambda new, old: jnp.where(arrived, new, old[0]),
+                    new_cres, state["client_res"])
             new_state["client_res"] = jax.tree.map(lambda x: x[None], new_cres)
         # ---- upload: the ONLY protocol-level collective --------------------
-        combined = codec.tree_reduce(msg, ca, n_clients)
+        if mask is None and staleness is None:  # legacy tree_reduce overrides
+            combined = codec.tree_reduce(msg, ca, n_clients)
+        else:
+            combined = codec.tree_reduce(msg, ca, n_clients, mask=mask,
+                                         staleness=staleness)
         global_delta, new_sres, m_down = codec.tree_decode(
             combined, state.get("server_res"), numel=numel, iters=tc.stc_iters)
+        if mask is not None:
+            # zero-arrival step: the server must not move either -- without
+            # this gate a stateful codec (stc) would still drain its server
+            # residual into a parameter update off the all-zero combined tree
+            total = jnp.sum(mask)
+            if ca:
+                total = jax.lax.psum(total, ca)
+            any_arrived = total > 0
+            global_delta = jax.tree.map(
+                lambda d: jnp.where(any_arrived, d, 0.0), global_delta)
+            if new_sres is not None:
+                new_sres = jax.tree.map(
+                    lambda new, old: jnp.where(any_arrived, new, old),
+                    new_sres, state.get("server_res"))
         if "server_res" in state:
             new_state["server_res"] = new_sres
         metrics.update(m_up)
@@ -279,7 +321,13 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         return new_state, metrics
 
     if not ca:
-        return step_fn
+        def single(state, batch, mask=None, staleness=None):
+            if not tc.masked and (mask is not None or staleness is not None):
+                raise ValueError(
+                    "train_step got mask/staleness but TrainConfig.masked is "
+                    "False; rebuild the step with TrainConfig(masked=True)")
+            return step_fn(state, batch, mask, staleness)
+        return single
 
     state_specs_in = {
         "params": P(), "step": P(),
@@ -293,7 +341,11 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
         out_specs_state["server_res"] = P()
     # momentum specs are added dynamically at call time (same prefix trick)
 
-    def wrapped(state, batch):
+    def wrapped(state, batch, mask=None, staleness=None):
+        if not tc.masked and (mask is not None or staleness is not None):
+            raise ValueError(
+                "train_step got mask/staleness but TrainConfig.masked is "
+                "False; rebuild the step with TrainConfig(masked=True)")
         specs_in = dict(state_specs_in)
         specs_out = dict(out_specs_state)
         if "momentum" in state:
@@ -301,19 +353,25 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
             specs_out["momentum"] = P(ca)
         outs = ((specs_out, P(), (P(ca), P())) if tc.measure_wire
                 else (specs_out, P()))
+        # masked/async mode: the per-client participation mask + staleness
+        # vectors ride in split over the client axes, one slice per shard
+        in_specs = ((specs_in, P(ca), P(ca), P(ca)) if tc.masked
+                    else (specs_in, P(ca)))
+        args = (state, batch, mask, staleness) if tc.masked \
+            else (state, batch)
         # NOTE: partial-manual shard_map must run through jit (the eager impl
         # path mishandles check_vma=False with auto axes in jax 0.8).
         if hasattr(jax, "shard_map"):
-            f = jax.shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
+            f = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
                               out_specs=outs,
                               axis_names=set(ca), check_vma=False)
         else:  # jax <= 0.4.x spelling: manual axes via the auto-complement
             from jax.experimental.shard_map import shard_map
             auto = frozenset(mesh.axis_names) - set(ca)
-            f = shard_map(step_fn, mesh=mesh, in_specs=(specs_in, P(ca)),
+            f = shard_map(step_fn, mesh=mesh, in_specs=in_specs,
                           out_specs=outs, check_rep=False,
                           auto=auto)
-        return f(state, batch)
+        return f(*args)
 
     return jax.jit(wrapped)
 

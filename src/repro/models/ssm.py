@@ -190,7 +190,6 @@ def ssd_decode(params, x: jnp.ndarray, cache: SSMCache, cfg: SSMConfig,
 
     # conv with cached tail
     hist = jnp.concatenate([cache.conv.astype(x.dtype), xbc], axis=1)  # (B,k,C)
-    k = params["conv_w"].shape[0]
     conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(x.dtype))
     xbc1 = jax.nn.silu(conv_out)[:, None, :]
     new_conv = hist[:, 1:, :]

@@ -151,7 +151,6 @@ def _cache_leaf_spec(cache, field: str, dp) -> P:
 def cache_specs(caches: list, mesh: Mesh, global_batch: int) -> list:
     """Per-layer cache PartitionSpec trees (same structure as the caches)."""
     dp = batch_spec(mesh, global_batch)
-    dp_axis = dp if dp != P(None) else None
     dp_name = None
     if len(dp) and dp[0] is not None:
         dp_name = dp[0]

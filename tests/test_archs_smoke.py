@@ -4,7 +4,6 @@ on CPU, asserting output shapes and no NaNs; plus one decode step."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config, input_specs

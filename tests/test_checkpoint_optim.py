@@ -1,6 +1,5 @@
 """Checkpoint roundtrip + optimizer behavior."""
 
-import os
 
 import jax
 import jax.numpy as jnp

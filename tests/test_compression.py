@@ -11,7 +11,7 @@ except ImportError:  # minimal deterministic fallback (see the stub)
 
 from repro.core.compression import (flatten_pytree, majority_vote_sign,
                                     sign_compress, stc_compress,
-                                    stc_compress_pytree, ternarize,
+                                    stc_compress_pytree,
                                     top_k_mask, top_k_sparsify,
                                     unflatten_pytree)
 

@@ -1,6 +1,5 @@
 """Golomb codec: roundtrip + analytic model (Eqs. 15-17) validation."""
 
-import math
 
 import numpy as np
 import pytest

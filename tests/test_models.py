@@ -2,7 +2,6 @@
 naive recurrence, RG-LRU vs sequential loop, and whole-model prefill/decode
 consistency for every block family."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

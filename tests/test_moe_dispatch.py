@@ -60,7 +60,6 @@ class TestCapacityDispatch:
 
 class TestFitSpec:
     def test_divisible_kept_nondivisible_dropped(self):
-        import os
         if len(jax.devices()) < 4:
             pytest.skip("needs multi-device mesh")
 

@@ -4,10 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # minimal deterministic fallback (see the stub)
-    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import (Protocol, encode_ternary, decode_ternary,
                         make_protocol, stc_compress)

@@ -1,0 +1,110 @@
+"""Chunked vs flat k-selection/encode micro-benchmarks at n = 2^20.
+
+Rows (written to ``benchmarks/BENCH_chunked.json`` by run.py, P = 8 clients,
+p = 1/400 -- the paper's upload sparsity):
+
+  chunked_select_flat      -- ONE flat selection per client over the whole
+                              2^20 vector (today's path): select_batch on
+                              (8, 2^20) rows with k = 2621
+  chunked_select_c16384    -- the same data as (8*64, 2^14) (client, chunk)
+                              rows, per-chunk k = 40, ONE batched launch
+  chunked_select_c65536    -- chunk = 2^16 (8*16 rows, k = 163)
+  chunked_select_whole     -- the chunked driver at chunk = whole-vector
+                              (must track chunked_select_flat: same work)
+  chunked_encode_flat      -- StcCodec.encode_batch (P, n): selection +
+                              ternarize + error feedback, flat
+  chunked_encode_pipe16384 -- ChunkedCodec.encode_batch over the 64-chunk
+                              spec: the pipelined multi-chunk row (fused
+                              per-chunk selection + per-chunk µ/residuals)
+
+The ISSUE acceptance row: chunked batched selection must be no slower than
+the flat path at n = 2^20.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (chunk_codec, chunk_spec_from_sizes, get_stc_backend,
+                        make_protocol, whole_vector_spec)
+from repro.core.residual import stack_states
+
+N = 1 << 20
+P = 8
+SPARSITY = 1 / 400
+
+
+def _timeit(fn, iters: int = 5) -> float:
+    out = fn()
+    jax.block_until_ready(out)          # warm / compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return 1e6 * best
+
+
+def run(verbose: bool = True, n: int = N):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((P, n)), jnp.float32)
+    be = get_stc_backend("jnp")
+    rows = []
+
+    def row(name, us, note):
+        rows.append((name, us, note))
+        if verbose:
+            print(f"{name:28s} {us:10.1f} us  {note}")
+
+    # -- selection: flat vs chunked, identical total data ------------------
+    k_flat = max(int(n * SPARSITY), 1)
+    sel_flat = jax.jit(lambda v: be.select_batch(v, k_flat))
+    us_flat = _timeit(lambda: sel_flat(x))
+    row("chunked_select_flat", us_flat, f"(8, 2^20) k={k_flat}")
+
+    for w in (1 << 14, 1 << 16):
+        c = n // w
+        k_c = max(int(w * SPARSITY), 1)
+        xc = x.reshape(P * c, w)
+        sel_c = jax.jit(lambda v, k=k_c: be.select_batch(v, k))
+        us_c = _timeit(lambda: sel_c(xc))
+        row(f"chunked_select_c{w}", us_c,
+            f"({P * c}, {w}) k={k_c}/chunk, "
+            f"{us_flat / us_c:.2f}x vs flat")
+
+    sel_w = jax.jit(lambda v: be.select_batch(v, k_flat))
+    row("chunked_select_whole", _timeit(lambda: sel_w(x)),
+        "chunk = whole vector (same work as flat)")
+
+    # -- full encode: flat codec vs the pipelined multi-chunk codec --------
+    stc = make_protocol("stc", sparsity_up=SPARSITY, sparsity_down=SPARSITY)
+    st_flat = stack_states(stc.init_client_state(n), P)
+    enc_flat = jax.jit(lambda d, s: stc.encode_batch(d, s)[0])
+    us_ef = _timeit(lambda: enc_flat(x, st_flat), iters=3)
+    row("chunked_encode_flat", us_ef, "StcCodec.encode_batch (P, 2^20)")
+
+    spec = chunk_spec_from_sizes([n], chunk_size=1 << 14)
+    cc = chunk_codec(stc, spec)
+    st_c = stack_states(cc.init_client_state(n), P)
+    enc_c = jax.jit(lambda d, s: cc.encode_batch(d, s)[0])
+    us_ec = _timeit(lambda: enc_c(x, st_c), iters=3)
+    row("chunked_encode_pipe16384", us_ec,
+        f"{spec.n_chunks} chunks/client, {us_ef / us_ec:.2f}x vs flat")
+
+    cw = chunk_codec(stc, whole_vector_spec(n))
+    st_w = stack_states(cw.init_client_state(n), P)
+    enc_w = jax.jit(lambda d, s: cw.encode_batch(d, s)[0])
+    row("chunked_encode_whole", _timeit(lambda: enc_w(x, st_w), iters=3),
+        "chunked driver, 1 whole-vector chunk")
+
+    return rows
+
+
+if __name__ == "__main__":
+    run()

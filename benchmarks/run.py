@@ -24,6 +24,7 @@ _HERE = os.path.dirname(os.path.abspath(__file__))
 BENCH_STC_PATH = os.path.join(_HERE, "BENCH_stc.json")
 BENCH_WIRE_PATH = os.path.join(_HERE, "BENCH_wire.json")
 BENCH_ASYNC_PATH = os.path.join(_HERE, "BENCH_async.json")
+BENCH_CHUNKED_PATH = os.path.join(_HERE, "BENCH_chunked.json")
 
 
 def _write_bench(path: str, rows, unit: str = "us") -> None:
@@ -59,6 +60,10 @@ def write_bench_async(rows) -> None:
     _write_bench(BENCH_ASYNC_PATH, rows, unit="mixed")
 
 
+def write_bench_chunked(rows) -> None:
+    _write_bench(BENCH_CHUNKED_PATH, rows)
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
@@ -66,10 +71,10 @@ def main() -> None:
     from benchmarks import kernel_bench, paper_claims
 
     rows = []
-    which = args or ["golomb", "wire", "kernels", "async", "fig3", "fig5",
-                     "fig2", "table4", "fig8", "roofline"]
+    which = args or ["golomb", "wire", "kernels", "chunked", "async", "fig3",
+                     "fig5", "fig2", "table4", "fig8", "roofline"]
     if quick:
-        which = args or ["golomb", "wire", "kernels", "fig3"]
+        which = args or ["golomb", "wire", "kernels", "chunked", "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -82,6 +87,11 @@ def main() -> None:
             wrows = wire_bench.run(verbose=False)
             write_bench_wire(wrows)
             rows += wrows
+        elif name == "chunked":
+            from benchmarks import chunked_bench
+            crows = chunked_bench.run(verbose=False)
+            write_bench_chunked(crows)
+            rows += crows
         elif name == "async":
             from benchmarks import async_bench
             arows = async_bench.run(verbose=False)

@@ -35,7 +35,14 @@ def main():
     ap.add_argument("--protocols", nargs="+", default=None,
                     metavar="NAME", help="codec names to run (default: every "
                     f"registered codec: {', '.join(registered_protocols())})")
+    ap.add_argument("--chunks", default=None,
+                    help="chunked (layer, chunk) codec states: an int chunk "
+                         "size, or 'whole' for the single whole-vector chunk "
+                         "(bit-identical to the flat path)")
     args = ap.parse_args()
+    chunks = None
+    if args.chunks is not None:
+        chunks = args.chunks if args.chunks == "whole" else int(args.chunks)
 
     if args.model == "lstm":
         from repro.data import make_sequence_classification
@@ -60,7 +67,7 @@ def main():
         rounds = max(args.rounds // proto.local_iters, 1)
         t0 = time.time()
         tr = FederatedTrainer(MODEL_ZOO[args.model], train, test, env, proto,
-                              TrainerConfig(lr=0.05))
+                              TrainerConfig(lr=0.05, chunks=chunks))
         h = tr.run(rounds, eval_every=rounds)[-1]
         print(f"{pname:>10s} {h['acc']:6.3f} {h['bits_up']/8e6:9.2f} "
               f"{h['bits_down']/8e6:9.2f} {h['iterations']:6d} "

@@ -26,19 +26,37 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json")
+DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json",
+                 "benchmarks/BENCH_chunked.json")
 
 
-def row_value(row: dict) -> float:
-    """A bench row's scalar, whatever key vintage wrote it."""
-    return float(row["us"] if "us" in row else row["value"])
+def row_value(row: dict):
+    """A bench row's scalar, whatever key vintage wrote it (None when the
+    row carries no recognizable value key -- e.g. a bench family written by
+    a newer run that the committed baseline vintage predates)."""
+    if "us" in row:
+        return float(row["us"])
+    if "value" in row:
+        return float(row["value"])
+    return None
 
 
-def medians_by_name(payload: dict) -> dict[str, float]:
-    """name -> median value over a payload's (possibly repeated) rows."""
+def medians_by_name(payload: dict, unparsed: list | None = None
+                    ) -> dict[str, float]:
+    """name -> median value over a payload's (possibly repeated) rows.
+
+    Rows missing a name or value key are SKIPPED (collected into
+    ``unparsed`` when given) instead of raising: a bench family present on
+    one side only must stay a report-only warning, never a crash."""
     by_name: dict[str, list[float]] = {}
     for row in payload.get("rows", []):
-        by_name.setdefault(row["name"], []).append(row_value(row))
+        name = row.get("name")
+        val = row_value(row)
+        if name is None or val is None:
+            if unparsed is not None:
+                unparsed.append(name or "<unnamed>")
+            continue
+        by_name.setdefault(name, []).append(val)
     return {name: statistics.median(vals) for name, vals in by_name.items()}
 
 
@@ -96,13 +114,24 @@ def main(argv=None) -> int:
             fresh_payload = json.load(f)
         baseline_payload = load_baseline(rel, args.ref)
         if baseline_payload is None:
-            print(f"  no committed baseline at {args.ref}; SKIP (first run)")
+            # a bench family the fresh run produced but the committed tree
+            # does not know yet: report-only, never a failure
+            print(f"  no committed baseline at {args.ref}; report-only "
+                  "(new bench family, gates from its next commit on)")
             continue
         if fresh_payload.get("unit", "us") != "us":
             print("  non-timing file (unit != us); report only, never gates")
-        report, regressions = compare(medians_by_name(baseline_payload),
-                                      medians_by_name(fresh_payload),
-                                      args.tolerance)
+        unparsed_base: list = []
+        unparsed_fresh: list = []
+        report, regressions = compare(
+            medians_by_name(baseline_payload, unparsed_base),
+            medians_by_name(fresh_payload, unparsed_fresh),
+            args.tolerance)
+        for side, names in (("baseline", unparsed_base),
+                            ("fresh", unparsed_fresh)):
+            for name in names:
+                print(f"  WARNING unparsed {side} row {name!r} "
+                      "(no us/value key); report-only")
         print("\n".join(report))
         if regressions and fresh_payload.get("unit", "us") == "us":
             failed = True

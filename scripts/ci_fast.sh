@@ -37,4 +37,7 @@ python -m pytest -m "not slow" -q
 stage protocol-smoke
 python scripts/smoke_protocols.py
 
+stage protocol-smoke-chunked
+python scripts/smoke_protocols.py --chunks 64
+
 stage done

@@ -33,16 +33,22 @@ def main():
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--model", default="logreg")
     ap.add_argument("--timeout", type=int, default=600)
+    ap.add_argument("--chunks", default=None,
+                    help="forwarded to the example: chunked (layer, chunk) "
+                         "codec states (int chunk size or 'whole')")
     args = ap.parse_args()
 
     names = registered()
-    print(f"smoking {len(names)} registered codecs: {' '.join(names)}")
+    mode = f" (chunks={args.chunks})" if args.chunks else ""
+    print(f"smoking {len(names)} registered codecs{mode}: {' '.join(names)}")
     failures = []
     for name in names:
         cmd = [sys.executable, os.path.join(REPO, "examples",
                                             "federated_noniid.py"),
                "--rounds", str(args.rounds), "--model", args.model,
                "--protocols", name]
+        if args.chunks:
+            cmd += ["--chunks", str(args.chunks)]
         t0 = time.time()
         try:
             r = subprocess.run(cmd, env=ENV, cwd=REPO, capture_output=True,

@@ -6,6 +6,7 @@ Public API:
     golomb       -- Eq. 15-17 entropy models + per-bit oracle bitstream codec
     wire         -- vectorized/batched wire-format packer (measured bits)
     protocols    -- Protocol objects: baseline / fedavg / signsgd / topk / stc
+    chunking     -- ChunkSpec + chunk_codec: per-(layer, chunk) block codecs
     caching      -- server partial-sum cache P^(s) for partial participation
 """
 
@@ -18,6 +19,7 @@ from .compression import (
     register_stc_backend,
     sign_compress,
     stc_compress,
+    stc_compress_blocks,
     stc_compress_pytree,
     ternarize,
     ternary_quantize,
@@ -57,6 +59,14 @@ from .protocols import (
     register_protocol,
     registered_protocols,
 )
+from .chunking import (
+    ChunkedCodec,
+    ChunkSpec,
+    chunk_codec,
+    chunk_spec_from_sizes,
+    chunk_spec_from_tree,
+    whole_vector_spec,
+)
 from .residual import (
     ResidualState,
     compress_with_feedback,
@@ -71,7 +81,8 @@ __all__ = [
     "CompressionStats", "StcBackend", "get_stc_backend",
     "register_stc_backend", "flatten_pytree", "majority_vote_sign",
     "sign_compress",
-    "stc_compress", "stc_compress_pytree", "ternarize", "ternary_quantize",
+    "stc_compress", "stc_compress_blocks", "stc_compress_pytree",
+    "ternarize", "ternary_quantize",
     "top_k_mask",
     "top_k_sparsify", "unflatten_pytree", "decode_ternary", "encode_ternary",
     "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",
@@ -83,6 +94,8 @@ __all__ = [
     "get_wire_backend", "register_wire_backend",
     "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
     "registered_protocols", "get_protocol_class",
+    "ChunkSpec", "ChunkedCodec", "chunk_codec", "chunk_spec_from_sizes",
+    "chunk_spec_from_tree", "whole_vector_spec",
     "ResidualState", "compress_with_feedback", "init_residual",
     "stack_states", "take_states", "scatter_states",
     "UpdateCache",

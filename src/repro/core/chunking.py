@@ -1,0 +1,487 @@
+"""Chunked per-layer codec states: compress ``(layer, chunk)`` blocks.
+
+The paper applies STC to ONE flat parameter vector per client, but its Eq. 1
+bit accounting and the residual-accumulation mechanics (Eqs. 9-12) hold
+equally per block.  This module turns any registered :class:`Codec` into a
+chunked codec whose selection, Golomb parameter µ and residuals are
+INDEPENDENT per ``(layer, chunk)`` block -- which is what lets selection
+sweeps shard and pipeline across a mesh instead of serializing on one flat
+top-k, and what makes per-layer sparsity schedules (T-FedAvg-style tuned
+ranges, Xu et al. 2020) expressible.
+
+Two pieces:
+
+* :class:`ChunkSpec` -- static chunk geometry computed from the model pytree
+  (layer boundaries + a chunk size): which flat slice each chunk covers,
+  zero-padded ``split``/``merge`` between the flat ``(P, numel)`` trainer
+  view and the ``(P, n_chunks, chunk_numel)`` block view.  Chunks never
+  cross layer boundaries (except the degenerate ``whole_vector_spec``); the
+  last chunk of a layer may be ragged and empty layers contribute none.
+
+* :func:`chunk_codec` -- wraps a base codec into a :class:`ChunkedCodec`
+  implementing the full flat :class:`Codec` interface (so both trainers run
+  it unchanged), with per-chunk states, per-chunk analytic/measured bit
+  ledgers and per-chunk wire framing.  A ``p_fn(layer_name, depth)`` hook
+  rescales the sparsity per layer for codecs that declare ``sparsity_up`` /
+  ``sparsity_down``.
+
+Semantics contract: the chunked result is EXACTLY the base codec applied to
+every chunk's unpadded slice independently (the "per-chunk flat oracle",
+property-tested in tests/test_chunked.py for every registry codec), and a
+``whole_vector_spec`` reproduces today's flat path bit for bit -- params,
+measured + analytic ledgers and wire_log (the trainer regression).
+
+Codecs with a genuinely batched block path opt in via
+``Codec.chunk_blocks = True`` + ``encode_chunk_blocks`` /
+``aggregate_chunk_blocks`` (STC: one backend ``select_batch`` launch over
+every ``(client, chunk)`` row); everything else runs the generic grouped
+path, which calls the base codec's own ``encode_batch``/``aggregate`` per
+(chunk-width, layer-codec) group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import wire
+from .compression import CompressionStats
+from .protocols import Codec
+
+__all__ = [
+    "ChunkSpec",
+    "chunk_spec_from_sizes",
+    "chunk_spec_from_tree",
+    "whole_vector_spec",
+    "ChunkedCodec",
+    "chunk_codec",
+]
+
+
+class ChunkSpec(NamedTuple):
+    """Static ``(layer, chunk)`` geometry over a flat parameter vector.
+
+    All fields are plain tuples so a spec is hashable (codecs carrying one
+    stay usable as jit-closure constants and cache keys).  ``chunk_numel``
+    is the uniform padded block width; chunk ``c`` covers the flat slice
+    ``[chunk_start[c], chunk_start[c] + chunk_valid[c])`` of layer
+    ``chunk_layer[c]``.
+    """
+
+    numel: int
+    chunk_numel: int
+    layer_names: tuple
+    layer_sizes: tuple
+    chunk_layer: tuple
+    chunk_start: tuple
+    chunk_valid: tuple
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunk_start)
+
+    def is_whole_vector(self) -> bool:
+        return self.n_chunks == 1 and self.chunk_valid[0] == self.numel
+
+    # -- flat <-> block views -------------------------------------------------
+    def split(self, x):
+        """``(..., numel)`` -> zero-padded ``(..., n_chunks, chunk_numel)``.
+
+        Works on jnp and numpy arrays alike (pad-one-then-gather)."""
+        idx = _gather_index(self)
+        if isinstance(x, np.ndarray):
+            pad = np.zeros(x.shape[:-1] + (1,), x.dtype)
+            return np.concatenate([x, pad], axis=-1)[..., idx]
+        pad = jnp.zeros(x.shape[:-1] + (1,), x.dtype)
+        return jnp.concatenate([x, pad], axis=-1)[..., idx]
+
+    def merge(self, blocks):
+        """``(..., n_chunks, chunk_numel)`` -> ``(..., numel)`` (drops pad)."""
+        inv = _merge_index(self)
+        flat = blocks.reshape(blocks.shape[:-2] + (-1,))
+        return flat[..., inv]
+
+    def valid_mask(self) -> np.ndarray:
+        """(n_chunks, chunk_numel) bool: True where a block element is real."""
+        return (np.arange(self.chunk_numel)[None, :]
+                < np.asarray(self.chunk_valid)[:, None])
+
+    # -- per-chunk hyperparameters -------------------------------------------
+    def chunk_ks(self, ps) -> np.ndarray:
+        """Per-chunk ``k = max(int(valid * p), 1)`` (Algorithm 1 line 3,
+        applied to each block's UNPADDED length)."""
+        ps = np.broadcast_to(np.asarray(ps, np.float64), (self.n_chunks,))
+        valid = np.asarray(self.chunk_valid, np.int64)
+        return np.maximum((valid.astype(np.float64) * ps).astype(np.int64), 1)
+
+
+@functools.lru_cache(maxsize=128)
+def _gather_index(spec: ChunkSpec) -> np.ndarray:
+    """(n_chunks, chunk_numel) flat-position gather; padding points at the
+    sentinel column ``numel`` (a zero appended by ``split``)."""
+    idx = np.full((spec.n_chunks, spec.chunk_numel), spec.numel, np.int64)
+    for c, (start, valid) in enumerate(zip(spec.chunk_start,
+                                           spec.chunk_valid)):
+        idx[c, :valid] = np.arange(start, start + valid)
+    return idx
+
+
+@functools.lru_cache(maxsize=128)
+def _merge_index(spec: ChunkSpec) -> np.ndarray:
+    """(numel,) index into the flattened (n_chunks*chunk_numel,) block view."""
+    inv = np.empty(spec.numel, np.int64)
+    for c, (start, valid) in enumerate(zip(spec.chunk_start,
+                                           spec.chunk_valid)):
+        inv[start : start + valid] = c * spec.chunk_numel + np.arange(valid)
+    return inv
+
+
+def chunk_spec_from_sizes(sizes, names=None,
+                          chunk_size: Optional[int] = None) -> ChunkSpec:
+    """Spec from per-layer flat sizes.  ``chunk_size=None`` = one chunk per
+    (non-empty) layer; otherwise each layer splits into ``ceil(size /
+    chunk_size)`` chunks with a ragged tail.  Empty layers contribute no
+    chunks but keep their name/size slot (the flat offsets stay aligned)."""
+    sizes = [int(s) for s in sizes]
+    if names is None:
+        names = [f"layer{i}" for i in range(len(sizes))]
+    if chunk_size is not None and chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    chunk_layer, chunk_start, chunk_valid = [], [], []
+    off = 0
+    for li, size in enumerate(sizes):
+        step = size if chunk_size is None else min(chunk_size, max(size, 1))
+        pos = 0
+        while pos < size:
+            valid = min(step, size - pos)
+            chunk_layer.append(li)
+            chunk_start.append(off + pos)
+            chunk_valid.append(valid)
+            pos += valid
+        off += size
+    if not chunk_start:
+        raise ValueError(f"no non-empty layers in {sizes}")
+    return ChunkSpec(
+        numel=off, chunk_numel=max(chunk_valid),
+        layer_names=tuple(names), layer_sizes=tuple(sizes),
+        chunk_layer=tuple(chunk_layer), chunk_start=tuple(chunk_start),
+        chunk_valid=tuple(chunk_valid))
+
+
+def chunk_spec_from_tree(tree, chunk_size: Optional[int] = None) -> ChunkSpec:
+    """Spec whose layers are the pytree's leaves, in flat-concatenation
+    order (matching :func:`repro.core.compression.flatten_pytree`)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(path) for path, _ in flat]
+    sizes = [leaf.size for _, leaf in flat]
+    return chunk_spec_from_sizes(sizes, names, chunk_size)
+
+
+def whole_vector_spec(numel: int) -> ChunkSpec:
+    """The degenerate spec: ONE chunk spanning the whole flat vector (crossing
+    layer boundaries) -- the flat-path bit-identity regression point."""
+    return chunk_spec_from_sizes([numel], names=["all"], chunk_size=None)
+
+
+# ---------------------------------------------------------------------------
+# the chunked codec wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=128)
+def _chunk_groups(spec: ChunkSpec, layer_codecs: tuple):
+    """Chunks grouped by (unpadded width, layer codec): every group can run
+    the base codec's own batched path on one stacked unpadded slice.  The
+    group count is tiny and static (<= 2 per distinct layer codec)."""
+    groups: dict = {}
+    for c in range(spec.n_chunks):
+        key = (spec.chunk_valid[c], layer_codecs[spec.chunk_layer[c]])
+        groups.setdefault(key, []).append(c)
+    return tuple((valid, codec, tuple(idxs))
+                 for (valid, codec), idxs in groups.items())
+
+
+@functools.lru_cache(maxsize=1024)
+def _analytic_bits(spec: ChunkSpec, layer_codecs: tuple, direction: str,
+                   n_participating: int) -> float:
+    """Eq. 1 summed over every chunk's UNPADDED length (cached: constant
+    per frozen codec, but evaluated by the trainers every round)."""
+    per_chunk = (layer_codecs[li] for li in spec.chunk_layer)
+    if direction == "up":
+        return float(sum(c.upload_bits(v)
+                         for c, v in zip(per_chunk, spec.chunk_valid)))
+    return float(sum(c.download_bits(v, n_participating=n_participating)
+                     for c, v in zip(per_chunk, spec.chunk_valid)))
+
+
+def _state_index(idxs, valid, leaf_ndim, lead: int):
+    """Index tuple selecting chunks ``idxs`` (truncated to ``valid`` on a
+    trailing block axis) out of a state leaf with ``lead`` leading axes
+    before the chunk axis."""
+    ix = (slice(None),) * lead + (np.asarray(idxs),)
+    if leaf_ndim > lead + 1:
+        ix = ix + (Ellipsis, slice(0, valid))
+    return ix
+
+
+def _take_chunks(state, idxs, valid, lead):
+    return jax.tree.map(
+        lambda x: x[_state_index(idxs, valid, x.ndim, lead)], state)
+
+
+def _put_chunks(full, upd, idxs, valid, lead):
+    return jax.tree.map(
+        lambda f, u: f.at[_state_index(idxs, valid, f.ndim, lead)].set(u),
+        full, upd)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedCodec(Codec):
+    """A base :class:`Codec` applied independently per ``(layer, chunk)``.
+
+    Implements the flat codec interface over the full ``numel`` vector, so
+    both trainers carry it with zero changes; internally every chunk has its
+    own k-selection, µ, residual state, wire sub-stream and ledger entry.
+    Build via :func:`chunk_codec` (which applies the per-layer sparsity
+    schedule hook and forwards the base codec's trainer-visible fields).
+    """
+
+    name = "chunked"
+
+    base: Codec = None
+    spec: ChunkSpec = None
+    layer_codecs: tuple = ()
+
+    # -- forwarded base behaviour (properties shadow the base-class
+    #    ClassVars: a wrapper is whatever its base is) ------------------------
+    @property
+    def error_feedback(self):                                  # noqa: D401
+        return self.base.error_feedback
+
+    @property
+    def wire_format(self):
+        return self.base.wire_format
+
+    @property
+    def wire_static_size(self):
+        return self.base.wire_static_size
+
+    def _chunk_codecs(self):
+        """Per-chunk codec (the layer's, after the p_fn schedule)."""
+        return tuple(self.layer_codecs[li] for li in self.spec.chunk_layer)
+
+    def _chunk_ps(self, direction: str) -> np.ndarray:
+        field = "sparsity_up" if direction == "up" else "sparsity_down"
+        return np.asarray([getattr(c, field) for c in self._chunk_codecs()],
+                          np.float64)
+
+    def _groups(self):
+        return _chunk_groups(self.spec, self.layer_codecs)
+
+    # -- state ----------------------------------------------------------------
+    def _stacked_state(self, one):
+        if one is None:
+            return None
+        n = self.spec.n_chunks
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
+
+    def init_client_state(self, numel: int):
+        return self._stacked_state(
+            self.base.init_client_state(self.spec.chunk_numel))
+
+    def init_server_state(self, numel: int):
+        return self._stacked_state(
+            self.base.init_server_state(self.spec.chunk_numel))
+
+    # -- client side ----------------------------------------------------------
+    def encode(self, delta, state):
+        msgs, states, stats = self.encode_batch(
+            delta[None], jax.tree.map(lambda x: x[None], state))
+        return (msgs[0], jax.tree.map(lambda x: x[0], states),
+                jax.tree.map(lambda x: x[0], stats))
+
+    def encode_batch(self, deltas, states):
+        spec = self.spec
+        blocks = spec.split(deltas)            # (P, C, W)
+        if self.base.chunk_blocks:
+            ks = spec.chunk_ks(self._chunk_ps("up"))
+            msg_blocks, states, _ = self.base.encode_chunk_blocks(
+                blocks, states, ks=ks)
+        else:
+            msg_blocks = jnp.zeros_like(blocks)
+            for valid, codec, idxs in self._groups():
+                sub = blocks[:, np.asarray(idxs), :valid]      # (P, G, valid)
+                st_g = _take_chunks(states, idxs, valid, lead=1)
+                m_g, st_g, _ = jax.vmap(codec.encode_batch,
+                                        in_axes=(1, 1), out_axes=1)(sub, st_g)
+                msg_blocks = msg_blocks.at[:, np.asarray(idxs),
+                                           :valid].set(m_g)
+                states = _put_chunks(states, st_g, idxs, valid, lead=1)
+        msgs = spec.merge(msg_blocks)
+        stats = CompressionStats(
+            nnz=jnp.sum(msgs != 0, axis=-1),
+            numel=jnp.full(msgs.shape[0], spec.numel),
+            mu=jnp.zeros(msgs.shape[0], jnp.float32))
+        return msgs, states, stats
+
+    # -- server side ----------------------------------------------------------
+    def aggregate(self, msgs, server_state, mask=None, staleness=None):
+        spec = self.spec
+        blocks = spec.split(msgs)              # (P, C, W)
+        if self.base.chunk_blocks:
+            ks = spec.chunk_ks(self._chunk_ps("down"))
+            out_blocks, server_state, _ = self.base.aggregate_chunk_blocks(
+                blocks, server_state, ks=ks, mask=mask, staleness=staleness)
+        else:
+            out_blocks = jnp.zeros(blocks.shape[1:], jnp.float32)
+            for valid, codec, idxs in self._groups():
+                sub = blocks[:, np.asarray(idxs), :valid]
+                st_g = _take_chunks(server_state, idxs, valid, lead=0)
+                o_g, st_g, _ = jax.vmap(
+                    lambda m, s, c=codec: c.aggregate(
+                        m, s, mask=mask, staleness=staleness),
+                    in_axes=(1, 0), out_axes=0)(sub, st_g)
+                out_blocks = out_blocks.at[np.asarray(idxs), :valid].set(o_g)
+                server_state = _put_chunks(server_state, st_g, idxs, valid,
+                                           lead=0)
+        out = spec.merge(out_blocks)
+        stats = CompressionStats(nnz=jnp.sum(out != 0),
+                                 numel=jnp.asarray(spec.numel),
+                                 mu=jnp.asarray(0.0))
+        return out, server_state, stats
+
+    # -- analytic bit ledger (Eq. 1 summed over chunks) -----------------------
+    # cached: the codec is frozen/hashable and the trainers evaluate these
+    # host-side every round (a fine-chunked big model has 10k+ chunks)
+    def upload_bits(self, numel: int) -> float:
+        return _analytic_bits(self.spec, self.layer_codecs, "up", 1)
+
+    def download_bits(self, numel: int, n_participating: int = 1) -> float:
+        return _analytic_bits(self.spec, self.layer_codecs, "down",
+                              n_participating)
+
+    # -- wire format: one sub-stream + header per chunk -----------------------
+    def encode_wire_batch(self, msgs, *,
+                          direction: str = "up") -> wire.ChunkedWireBatch:
+        spec = self.spec
+        x = np.ascontiguousarray(np.asarray(msgs, np.float32))
+        if x.ndim == 1:
+            x = x[None]
+        P = x.shape[0]
+        blocks = spec.split(x)                                  # np (P, C, W)
+        batches, group_ids, group_valid = [], [], []
+        bit_len = np.zeros(P, np.int64)
+        nnz = np.zeros(P, np.int64)
+        for valid, codec, idxs in self._groups():
+            G = len(idxs)
+            rows = np.ascontiguousarray(
+                blocks[:, np.asarray(idxs), :valid]).reshape(P * G, valid)
+            wb = codec.encode_wire_batch(rows, direction=direction)
+            batches.append(wb)
+            group_ids.append(idxs)
+            group_valid.append(valid)
+            bit_len += np.asarray(wb.bit_len).reshape(P, G).sum(axis=1)
+            nnz += np.asarray(wb.nnz).reshape(P, G).sum(axis=1)
+        return wire.ChunkedWireBatch(
+            batches=tuple(batches), chunk_ids=tuple(group_ids),
+            chunk_valid=tuple(group_valid), bit_len=bit_len, nnz=nnz,
+            n_msgs=P, numel=spec.numel, n_chunks=spec.n_chunks)
+
+    def encode_wire(self, msg, *, direction: str = "up"):
+        batch = self.encode_wire_batch(np.asarray(msg)[None],
+                                       direction=direction)
+        return wire.ChunkedWireMessage(batch)
+
+    def decode_wire_batch(self, batch: wire.ChunkedWireBatch, *,
+                          direction: str = "up") -> np.ndarray:
+        spec = self.spec
+        blocks = np.zeros((batch.n_msgs, spec.n_chunks, spec.chunk_numel),
+                          np.float32)
+        # group order is deterministic: batches[g] parallels _groups()[g]
+        for (valid, codec, idxs), wb in zip(self._groups(), batch.batches):
+            G = len(idxs)
+            for p in range(batch.n_msgs):
+                for j, ci in enumerate(idxs):
+                    blocks[p, ci, :valid] = codec.decode_wire(
+                        wb.message(p * G + j), direction=direction)
+        return spec.merge(blocks)
+
+    def decode_wire(self, msg, *, direction: str = "up") -> np.ndarray:
+        if isinstance(msg, wire.ChunkedWireMessage):
+            msg = msg.batch
+        return self.decode_wire_batch(msg, direction=direction)[0]
+
+    def _header_bits_per_msg(self) -> float:
+        # every chunk carries the base codec's side information independently
+        return self.spec.n_chunks * self.base.wire_header_bits
+
+    def measured_batch_bits(self, batch) -> float:
+        return batch.total_bits() + batch.n_msgs * self._header_bits_per_msg()
+
+    def measured_message_bits(self, msg) -> float:
+        return msg.bit_len + self._header_bits_per_msg()
+
+    def wire_bound_bits(self, numel, nnz, direction="up"):
+        # Each chunk's bound is monotone in its nnz, so charging every chunk
+        # min(nnz, valid) ceilings ANY split of nnz across chunks; at
+        # whole-vector this reduces exactly to the base codec's bound.
+        per_chunk = [c.wire_bound_bits(v, min(int(nnz), v), direction)
+                     for c, v in zip(self._chunk_codecs(),
+                                     self.spec.chunk_valid)]
+        if any(b is None for b in per_chunk):
+            return None
+        return float(sum(per_chunk))
+
+    # -- tree path: delegate to the base codec (the mesh trainer chunks
+    #    per leaf through the codec's own chunk_size field instead) ----------
+    def tree_encode(self, delta, residual, *, numel, iters=32):
+        return self.base.tree_encode(delta, residual, numel=numel,
+                                     iters=iters)
+
+    def tree_reduce(self, msgs, axes, n_clients, mask=None, staleness=None):
+        return self.base.tree_reduce(msgs, axes, n_clients, mask=mask,
+                                     staleness=staleness)
+
+    def tree_decode(self, combined, residual, *, numel, iters=32):
+        return self.base.tree_decode(combined, residual, numel=numel,
+                                     iters=iters)
+
+
+def chunk_codec(base: Codec, spec: ChunkSpec,
+                p_fn: Optional[Callable] = None) -> ChunkedCodec:
+    """Wrap ``base`` into a :class:`ChunkedCodec` over ``spec``.
+
+    ``p_fn(layer_name, depth) -> p | None`` rescales the sparsity of layers
+    whose codec declares ``sparsity_up``/``sparsity_down`` (None keeps the
+    base value); other codecs ignore the hook.  The wrapper forwards the
+    base codec's trainer-visible knobs (``local_iters``, staleness decay).
+    """
+    if isinstance(base, ChunkedCodec):
+        raise TypeError("chunk_codec over an already-chunked codec")
+    params = inspect.signature(base.aggregate).parameters
+    if "mask" not in params and not any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        raise TypeError(
+            f"codec {base.name!r} predates the masked aggregate API; "
+            "chunked wrapping needs mask/staleness-aware codecs")
+    fields = {f.name for f in dataclasses.fields(type(base))}
+    layer_codecs = []
+    for depth, lname in enumerate(spec.layer_names):
+        c = base
+        p = p_fn(lname, depth) if p_fn is not None else None
+        if p is not None:
+            repl = {k: float(p) for k in ("sparsity_up", "sparsity_down")
+                    if k in fields}
+            if repl:
+                c = dataclasses.replace(base, **repl)
+        layer_codecs.append(c)
+    return ChunkedCodec(base=base, spec=spec, layer_codecs=tuple(layer_codecs),
+                        local_iters=base.local_iters,
+                        staleness_decay=base.staleness_decay)

@@ -22,6 +22,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "CompressionStats",
@@ -30,6 +31,7 @@ __all__ = [
     "ternarize",
     "ternary_quantize",
     "stc_compress",
+    "stc_compress_blocks",
     "sign_compress",
     "majority_vote_sign",
     "flatten_pytree",
@@ -207,11 +209,20 @@ class StcBackend(NamedTuple):
     ``compress_with_residual_batch(deltas (B, n), residuals (B, n), p)`` both
     return ``(msg, new_residual, CompressionStats)``; the batched form carries
     a leading client axis on every output.
+
+    ``select_batch(x (B, n), ks)`` is the registry's k-selection primitive:
+    ``ks`` is a static per-row k (int or (B,) array) and the result is
+    ``(thresh, count, sum_abs)`` vectors of shape (B,) with ``thresh`` the
+    exact ks[b]-th largest magnitude of row b (ties kept, as in
+    :func:`top_k_mask`).  It serves the chunked ``(layer, chunk)`` block
+    codecs and the per-leaf tree path, so "jnp" vs "kernel" is one flag for
+    every selection sweep in the repo.
     """
 
     name: str
     compress_with_residual: object
     compress_with_residual_batch: object
+    select_batch: object = None
 
 
 def _jnp_compress_with_residual(delta, residual, p: float):
@@ -225,9 +236,63 @@ def _jnp_compress_with_residual_batch(deltas, residuals, p: float):
         lambda d, r: _jnp_compress_with_residual(d, r, p))(deltas, residuals)
 
 
+def _static_ks(ks, n_rows: int, n: int) -> np.ndarray:
+    """Normalize a static per-row k spec to a (B,) numpy int array."""
+    arr = np.broadcast_to(np.asarray(ks, np.int64), (n_rows,))
+    if arr.size and not (1 <= int(arr.min()) and int(arr.max()) <= n):
+        raise ValueError(f"per-row k out of range [1, {n}]: {arr}")
+    return arr
+
+
+def _jnp_select_batch(x: jnp.ndarray, ks):
+    """Per-row exact k-selection via one ``lax.top_k`` gather.
+
+    The threshold is a pure selection (no arithmetic), and count/sum are
+    mask-then-reduce in natural element order -- exactly the ops of
+    :func:`top_k_mask` / :func:`ternarize`, so a single whole-vector row
+    reproduces the flat path bit for bit.
+    """
+    bsz, n = x.shape
+    ks = _static_ks(ks, bsz, n)
+    a = jnp.abs(x.astype(jnp.float32))
+    topc = jax.lax.top_k(a, min(int(ks.max()), n))[0]
+    kj = jnp.asarray(ks, jnp.int32)
+    v = jnp.take_along_axis(topc, (kj - 1)[:, None], axis=1)[:, 0]
+    mask = (a >= v[:, None]) & (a > 0.0)
+    cnt = jnp.sum(mask.astype(jnp.int32), axis=1)
+    sums = jnp.sum(jnp.where(mask, a, 0.0), axis=1)
+    return v, cnt, sums
+
+
+def stc_compress_blocks(carried: jnp.ndarray, ks, *, backend: str = "jnp"):
+    """STC over independent (B, block_numel) rows with per-row k.
+
+    The chunked-codec core: every row (one ``(layer, chunk)`` block, zero-
+    padded past its valid length -- padding can never be selected since
+    exact zeros are excluded) gets its own threshold and ternary magnitude.
+    Returns ``(tern, count, mu)`` with ``tern`` of the input shape and
+    (B,) count/mu vectors.  A single whole-vector row is bit-identical to
+    :func:`stc_compress`.
+    """
+    be = get_stc_backend(backend)
+    if be.select_batch is None:
+        raise NotImplementedError(
+            f"STC backend {be.name!r} does not implement select_batch; "
+            "chunked (layer, chunk) selection requires it -- see "
+            "StcBackend.select_batch")
+    a = jnp.abs(carried.astype(jnp.float32))
+    thresh, cnt, sums = be.select_batch(carried, ks)
+    mu = sums / jnp.maximum(cnt, 1).astype(jnp.float32)
+    mask = (a >= thresh[:, None]) & (a > 0.0)
+    tern = jnp.where(mask, mu[:, None] * jnp.sign(carried.astype(jnp.float32)),
+                     0.0)
+    return tern, cnt, mu
+
+
 STC_BACKENDS: dict[str, StcBackend] = {
     "jnp": StcBackend("jnp", _jnp_compress_with_residual,
-                      _jnp_compress_with_residual_batch),
+                      _jnp_compress_with_residual_batch,
+                      _jnp_select_batch),
 }
 
 
@@ -237,7 +302,8 @@ def register_stc_backend(backend: StcBackend) -> None:
 
 def _make_kernel_backend() -> StcBackend:
     # lazy: keeps core import-light and avoids a hard kernels dependency here
-    from repro.kernels import stc_compress_batch, stc_compress_kernel
+    from repro.kernels import (hist_topk_threshold_batched, stc_compress_batch,
+                               stc_compress_kernel)
 
     def single(delta, residual, p: float):
         tern, new_res, mu, _, nnz = stc_compress_kernel(delta, residual, p)
@@ -250,7 +316,13 @@ def _make_kernel_backend() -> StcBackend:
         stats = CompressionStats(nnz=nnz, numel=numel, mu=mu)
         return tern, new_res, stats
 
-    return StcBackend("kernel", single, batch)
+    def select(x, ks):
+        # histogram selection batched over every (client, chunk) row in ONE
+        # kernel launch (per-row k rides in as a vector)
+        return hist_topk_threshold_batched(
+            x, _static_ks(ks, x.shape[0], x.shape[1]))
+
+    return StcBackend("kernel", single, batch, select)
 
 
 def get_stc_backend(name: str) -> StcBackend:

@@ -28,13 +28,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.selection import (DEFAULT_CAP, NBINS, PASSES, bin_index,
                                   locate_bin, resolve_interpret)
 
 __all__ = ["TreeStats", "tree_numel", "stc_compress_tree",
-           "ternary_quantize_tree", "sign_compress_tree", "tree_add",
-           "tree_scale"]
+           "stc_compress_tree_chunked", "ternary_quantize_tree",
+           "sign_compress_tree", "tree_add", "tree_scale"]
 
 
 class TreeStats(NamedTuple):
@@ -222,6 +223,60 @@ def _finish_tree(tree, thresh, cnt_tot, sum_tot, numel):
 
     tern = jax.tree.map(tern_leaf, tree)
     return tern, TreeStats(nnz=cnt_tot, numel=numel, mu=mu, thresh=thresh)
+
+
+def stc_compress_tree_chunked(tree, p: float, chunk_size: int, *,
+                              p_fn=None, backend: str = "jnp"):
+    """Per-``(leaf, chunk)`` STC: independent selection + µ per block.
+
+    The chunked twin of :func:`stc_compress_tree`: instead of ONE global
+    threshold (which serializes every leaf behind a collective selection),
+    each leaf is cut into ``ceil(size / chunk_size)`` blocks and every block
+    gets its own exact k-selection and ternary magnitude through the STC
+    backend registry (``"jnp"`` top-k gather / ``"kernel"`` = the batched
+    Pallas histogram selector, one launch per leaf covering all its chunks).
+    No collectives anywhere: under shard_map each shard selects over its own
+    blocks only, so the sweeps pipeline across the mesh.
+
+    ``p_fn(layer_name, depth) -> p | None`` is the per-layer sparsity
+    schedule hook (None keeps ``p``).  Returns ``(ternary_tree, stats)``
+    with aggregate nnz/µ across all blocks.
+    """
+    from repro.core.compression import stc_compress_blocks
+
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    flat_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out_leaves = []
+    nnz_tot = jnp.zeros((), jnp.int32)
+    mu_num = jnp.zeros((), jnp.float32)     # Σ per-block µ·count (global µ)
+    numel = 0
+    for depth, (path, leaf) in enumerate(flat_leaves):
+        numel += leaf.size
+        if leaf.size == 0:
+            out_leaves.append(leaf)
+            continue
+        p_leaf = None if p_fn is None \
+            else p_fn(jax.tree_util.keystr(path), depth)
+        p_leaf = p if p_leaf is None else float(p_leaf)
+        flat = leaf.astype(jnp.float32).reshape(-1)
+        w = min(chunk_size, flat.size)
+        n_chunks = -(-flat.size // w)
+        pad = n_chunks * w - flat.size
+        blocks = jnp.pad(flat, (0, pad)).reshape(n_chunks, w)
+        valid = np.full(n_chunks, w, np.int64)
+        valid[-1] = flat.size - (n_chunks - 1) * w
+        ks = np.maximum((valid * p_leaf).astype(np.int64), 1)
+        tern, cnt, mu = stc_compress_blocks(blocks, ks, backend=backend)
+        out_leaves.append(
+            tern.reshape(-1)[: flat.size].reshape(leaf.shape)
+            .astype(leaf.dtype))
+        nnz_tot = nnz_tot + jnp.sum(cnt)
+        mu_num = mu_num + jnp.sum(mu * cnt.astype(jnp.float32))
+    out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    mu = mu_num / jnp.maximum(nnz_tot, 1).astype(jnp.float32)
+    return out, TreeStats(nnz=nnz_tot, numel=numel, mu=mu,
+                          thresh=jnp.zeros((), jnp.float32))
 
 
 def ternary_quantize_tree(tree, theta: float, *, manual_axes=(),

@@ -71,6 +71,7 @@ from .compression import (
     get_stc_backend,
     majority_vote_sign,
     sign_compress,
+    stc_compress_blocks,
     ternary_quantize,
     top_k_sparsify,
 )
@@ -197,6 +198,27 @@ class Codec:
         """Compress a whole (P, numel) round. Returns (msgs, states, stats),
         every output carrying the leading client axis."""
         return jax.vmap(lambda d, s: self.encode(d, s))(deltas, states)
+
+    # -- chunked (layer, chunk) block path ------------------------------------
+    # A codec with ``chunk_blocks = True`` compresses a zero-padded
+    # (P, n_chunks, chunk_numel) block tensor in ONE fused call with a static
+    # per-chunk k vector, instead of the generic per-group loop of
+    # :class:`repro.core.chunking.ChunkedCodec`.  Semantics contract: each
+    # block is compressed EXACTLY as the flat codec would compress its
+    # unpadded slice (padding is zero and must never be selected).
+
+    chunk_blocks: ClassVar[bool] = False
+
+    def encode_chunk_blocks(self, blocks, states, *, ks):
+        """Fused chunked upstream compression; see ``chunk_blocks`` above."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused chunk-blocks path")
+
+    def aggregate_chunk_blocks(self, blocks, server_state, *, ks, mask=None,
+                               staleness=None):
+        """Fused chunked aggregation + downstream compression."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused chunk-blocks path")
 
     # -- server side (aggregation + downstream) -----------------------------
     def participation_weights(self, mask, staleness=None) -> jnp.ndarray:
@@ -558,9 +580,19 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
     sparsity_down: float = 1 / 400
     backend: str = "jnp"                    # STC impl: "jnp" | "kernel"
     wire_backend: str = "numpy"             # wire packer: "numpy" | "kernel"
+    # tree-path chunking (the mesh trainer's TrainConfig.chunks): when set,
+    # tree_encode/tree_decode select per (leaf, chunk) block through the
+    # backend registry instead of one global flat top-k -- selection then
+    # stays local to each shard and pipelines across the mesh.  ``p_fn``
+    # is the per-layer sparsity schedule hook (p_fn(layer_name, depth)).
+    # The FLAT trainers chunk by wrapping (see repro.core.chunking); this
+    # field only drives the tree path.
+    chunk_size: Optional[int] = None
+    p_fn: Optional[object] = None
 
     wire_format: ClassVar[bool] = True      # Golomb position stream (Alg. 3)
     wire_header_bits: ClassVar[float] = 32.0  # fp32 µ per message (Eq. 15)
+    chunk_blocks: ClassVar[bool] = True     # fused (P, chunk, W) block path
 
     def init_server_state(self, numel: int) -> ResidualState:
         return init_residual(jnp.zeros((numel,), jnp.float32))
@@ -605,6 +637,31 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
             mean, server_state.residual, self.sparsity_down)
         return out, ResidualState(residual=new_res), stats
 
+    # ---- fused chunked block path (repro.core.chunking) ----
+    def encode_chunk_blocks(self, blocks, states, *, ks):
+        """One ``select_batch`` launch over every (client, chunk) row."""
+        P, C, W = blocks.shape
+        carried = (blocks.astype(jnp.float32)
+                   + states.residual.astype(jnp.float32))
+        tern, cnt, mu = stc_compress_blocks(
+            carried.reshape(P * C, W), np.tile(np.asarray(ks), P),
+            backend=self.backend)
+        tern = tern.reshape(P, C, W)
+        stats = CompressionStats(nnz=cnt.reshape(P, C).sum(axis=1),
+                                 numel=jnp.full(P, C * W),
+                                 mu=mu.reshape(P, C).mean(axis=1))
+        return tern, ResidualState(residual=carried - tern), stats
+
+    def aggregate_chunk_blocks(self, blocks, server_state, *, ks, mask=None,
+                               staleness=None):
+        mean = self.combine(blocks, mask, staleness)        # (C, W)
+        carried = mean + server_state.residual.astype(jnp.float32)
+        tern, cnt, mu = stc_compress_blocks(carried, ks, backend=self.backend)
+        stats = CompressionStats(nnz=jnp.sum(cnt),
+                                 numel=jnp.asarray(carried.size),
+                                 mu=jnp.mean(mu))
+        return tern, ResidualState(residual=carried - tern), stats
+
     def upload_bits(self, numel: int) -> float:
         return golomb.stc_message_bits(numel, self.sparsity_up)
 
@@ -613,18 +670,30 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
 
     # ---- tree path ----
     def tree_encode(self, delta, residual, *, numel, iters=32):
-        from .distributed import stc_compress_tree, tree_add
+        from .distributed import (stc_compress_tree,
+                                  stc_compress_tree_chunked, tree_add)
         carried = tree_add(delta, residual)
-        tern, st = stc_compress_tree(carried, self.sparsity_up, numel=numel,
-                                     iters=iters)
+        if self.chunk_size:
+            tern, st = stc_compress_tree_chunked(
+                carried, self.sparsity_up, self.chunk_size, p_fn=self.p_fn,
+                backend=self.backend)
+        else:
+            tern, st = stc_compress_tree(carried, self.sparsity_up,
+                                         numel=numel, iters=iters)
         new_res = jax.tree.map(lambda c, t: c - t, carried, tern)
         return tern, new_res, {"nnz_up": st.nnz}
 
     def tree_decode(self, combined, residual, *, numel, iters=32):
-        from .distributed import stc_compress_tree, tree_add
+        from .distributed import (stc_compress_tree,
+                                  stc_compress_tree_chunked, tree_add)
         carried = tree_add(combined, residual)
-        down, st = stc_compress_tree(carried, self.sparsity_down, numel=numel,
-                                     iters=iters)
+        if self.chunk_size:
+            down, st = stc_compress_tree_chunked(
+                carried, self.sparsity_down, self.chunk_size, p_fn=self.p_fn,
+                backend=self.backend)
+        else:
+            down, st = stc_compress_tree(carried, self.sparsity_down,
+                                         numel=numel, iters=iters)
         new_res = jax.tree.map(lambda c, t: c - t, carried, down)
         return down, new_res, {"nnz_down": st.nnz}
 

@@ -50,6 +50,8 @@ from . import golomb
 __all__ = [
     "WireMessage",
     "WireBatch",
+    "ChunkedWireBatch",
+    "ChunkedWireMessage",
     "WireBackend",
     "register_wire_backend",
     "get_wire_backend",
@@ -117,6 +119,58 @@ class WireBatch(NamedTuple):
 
     def total_bits(self) -> float:
         return float(self.bit_len.sum())
+
+
+class ChunkedWireBatch(NamedTuple):
+    """A round of chunked messages: per-(message, chunk) sub-streams.
+
+    The chunked codecs (:mod:`repro.core.chunking`) frame every message as
+    one independent sub-stream PER CHUNK, each with its own side-information
+    header (e.g. a per-chunk Golomb µ).  Chunks sharing wire parameters are
+    fused group-wise: ``batches[g]`` is ONE word-aligned :class:`WireBatch`
+    whose rows are message-major -- row ``p * len(chunk_ids[g]) + j`` is
+    message ``p``'s sub-stream for chunk ``chunk_ids[g][j]`` (a tensor of
+    ``chunk_valid[g]`` decoded elements).
+
+    ``bit_len`` / ``nnz`` are per-MESSAGE totals (summed over that message's
+    chunks), so the ledger sees the same shape contract as
+    :class:`WireBatch`.
+    """
+
+    batches: tuple          # tuple[WireBatch], one per wire-parameter group
+    chunk_ids: tuple        # tuple[tuple[int, ...]] chunk ids per group
+    chunk_valid: tuple      # tuple[int] decoded elements per chunk, per group
+    bit_len: np.ndarray     # (P,) total stream bits per message
+    nnz: np.ndarray         # (P,) total coded positions per message
+    n_msgs: int
+    numel: int              # decoded (merged) tensor length
+    n_chunks: int
+
+    def total_bits(self) -> float:
+        return float(self.bit_len.sum())
+
+
+class ChunkedWireMessage(NamedTuple):
+    """ONE chunked message (a :class:`ChunkedWireBatch` with ``n_msgs==1``),
+    quacking like :class:`WireMessage` for the trainers' ledger hooks."""
+
+    batch: ChunkedWireBatch
+
+    @property
+    def bit_len(self) -> int:
+        return int(self.batch.bit_len[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.batch.nnz[0])
+
+    @property
+    def numel(self) -> int:
+        return self.batch.numel
+
+    @property
+    def n_chunks(self) -> int:
+        return self.batch.n_chunks
 
 
 # ---------------------------------------------------------------------------

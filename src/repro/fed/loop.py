@@ -32,6 +32,13 @@ any codec registered via ``register_protocol`` runs here unchanged.  A codec
 whose ``aggregate`` predates the mask/staleness kwargs still works in the
 synchronous trainer; buffered aggregation requires the masked API.
 
+``TrainerConfig(chunks=...)`` wraps the codec into per-``(layer, chunk)``
+block states (:mod:`repro.core.chunking`): independent k-selection, µ,
+residuals and wire sub-streams per chunk, with ``p_fn(layer_name, depth)``
+as the per-layer sparsity schedule hook; ``chunks="whole"`` runs the
+chunked machinery over one whole-vector chunk, bit-identical to the flat
+path.
+
 Works with any model from ``repro.models.paper_models`` (or any
 (init_fn, apply_fn) pair with ``apply(params, x) -> logits``).
 """
@@ -48,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.caching import UpdateCache
+from repro.core.chunking import (chunk_codec, chunk_spec_from_tree,
+                                 whole_vector_spec)
 from repro.core.compression import flatten_pytree, unflatten_pytree
 from repro.core.protocols import Codec
 from repro.core.residual import scatter_states, stack_states, take_states
@@ -69,6 +78,16 @@ class TrainerConfig:
     # False forces analytic-only accounting (no per-round host transfer).
     # Codecs without a wire format are always analytic.
     measure_bits: bool | None = None
+    # Chunked (layer, chunk) codec states: an int chunk size splits every
+    # layer of the model pytree into independent blocks (own k-selection,
+    # Golomb µ, residuals and wire sub-stream per chunk); the string
+    # "whole" runs the chunked machinery over ONE whole-vector chunk
+    # (bit-identical to the flat path -- the regression point); None = the
+    # plain flat codec.  ``p_fn(layer_name, depth) -> p | None`` is the
+    # per-layer sparsity schedule hook (codecs without sparsity fields
+    # ignore it).
+    chunks: int | str | None = None
+    p_fn: Optional[Callable] = None
 
 
 def _cross_entropy(logits, y):
@@ -97,7 +116,6 @@ class FederatedTrainer:
                  tcfg: TrainerConfig = TrainerConfig()):
         self.apply_fn = model[1]
         self.env = env
-        self.protocol = protocol
         self.tcfg = tcfg
         self.train = train
         self.test = test
@@ -107,6 +125,12 @@ class FederatedTrainer:
         vec, self.spec = flatten_pytree(params)
         self.params_vec = vec
         self.numel = int(vec.size)
+
+        if tcfg.chunks is not None:
+            cspec = (whole_vector_spec(self.numel) if tcfg.chunks == "whole"
+                     else chunk_spec_from_tree(params, int(tcfg.chunks)))
+            protocol = chunk_codec(protocol, cspec, p_fn=tcfg.p_fn)
+        self.protocol = protocol
 
         self.splits = split_data(train.y, env, seed=tcfg.seed)
         self.rng = np.random.default_rng(tcfg.seed + 1)

@@ -50,6 +50,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.selection import (DEFAULT_CAP, NBINS, PASSES, bin_index,
@@ -218,9 +219,13 @@ def hist_topk_threshold(
     return t[0], cnt[0], sums[0]
 
 
-def _direct_topk_select_batched(a: jnp.ndarray, k: int, cap_eff: int):
-    """Batched form of the non-TPU small-k shortcut (per-row tie-spill mix)."""
+def _direct_topk_select_batched(a: jnp.ndarray, k, cap_eff: int):
+    """Batched form of the non-TPU small-k shortcut (per-row tie-spill mix).
+
+    ``k`` may be a scalar or a (B,) per-row vector (the chunked codecs give
+    every (client, chunk) row its own k)."""
     _, n = a.shape
+    k = jnp.asarray(k, jnp.int32).reshape(-1, 1)               # (1|B, 1)
     PASSES.record("topk_gather")                               # pass 1
     topc = jax.lax.top_k(a, cap_eff)[0]
     # masked-min instead of topc[:, k-1]: see _direct_topk_select
@@ -246,7 +251,7 @@ def _direct_topk_select_batched(a: jnp.ndarray, k: int, cap_eff: int):
 
 def hist_topk_threshold_batched(
     x: jnp.ndarray,
-    k: int,
+    k,
     *,
     bins: int = NBINS,
     cap: int = DEFAULT_CAP,
@@ -255,27 +260,34 @@ def hist_topk_threshold_batched(
 ):
     """Batched exact k-selection over (clients, n); same contract per row.
 
-    Returns ``(thresh, count, sum_abs)`` vectors of shape (B,).
+    ``k`` is static: an int shared by every row, or a (B,) array giving each
+    row its own k (the chunked ``(layer, chunk)`` block path -- one launch
+    selects every chunk of every client).  Returns ``(thresh, count,
+    sum_abs)`` vectors of shape (B,).
     """
     bsz, n = x.shape
-    assert 1 <= k <= n, (k, n)
+    k_arr = np.broadcast_to(np.asarray(k, np.int64), (bsz,))
+    assert 1 <= int(k_arr.min(initial=1)) and int(k_arr.max(initial=1)) <= n, \
+        (k, n)
+    k_max = int(k_arr.max(initial=1))
     x = x.astype(jnp.float32)
     cap_eff = min(cap, n)
     interpret = resolve_interpret(interpret)
 
-    if interpret and k <= cap_eff:      # non-TPU small-k shortcut: 1-2 passes
-        return _direct_topk_select_batched(jnp.abs(x), k, cap_eff)
+    if interpret and k_max <= cap_eff:  # non-TPU small-k shortcut: 1-2 passes
+        return _direct_topk_select_batched(jnp.abs(x), k_arr, cap_eff)
 
     PASSES.record("max")                                       # pass 1
     a = jnp.abs(x)
     a_max = jnp.max(a, axis=1)
     scale = jnp.where(a_max > 0, jnp.float32(bins) / a_max, 0.0)
 
+    kj = jnp.asarray(k_arr, jnp.int32)
     cnt, sums = magnitude_histogram_batched(                   # pass 2
         x, scale, bins=bins, block_rows=block_rows, interpret=interpret)
     b, cnt_gt, sum_gt, cnt_b = jax.vmap(
-        lambda c, s: locate_bin(c, s, k, bins))(cnt, sums)
-    r = k - cnt_gt
+        lambda c, s, kk: locate_bin(c, s, kk, bins))(cnt, sums, kj)
+    r = kj - cnt_gt
 
     PASSES.record("refine")                                    # pass 3
     in_bin = bin_index(a, scale[:, None], bins) == b[:, None]
@@ -291,7 +303,8 @@ def hist_topk_threshold_batched(
         return v, cnt_ex, sum_ex
 
     def _mixed(_):
-        vs = jnp.sort(a, axis=1)[:, n - k]
+        srt = jnp.sort(a, axis=1)
+        vs = jnp.take_along_axis(srt, (n - kj)[:, None], axis=1)[:, 0]
         m = a >= vs[:, None]
         cnt_s = jnp.sum(m.astype(jnp.int32), axis=1)
         sum_s = jnp.sum(jnp.where(m, a, 0.0), axis=1)

@@ -107,6 +107,14 @@ class TrainConfig:
     local_iters: int = 1            # fedavg delay period n
     compute_dtype: Any = jnp.bfloat16
     stc_iters: int = 32             # k-selection bisection rounds (§Perf lever)
+    chunks: int | None = None       # chunked (leaf, chunk) selection: each
+                                    # leaf splits into ceil(size/chunks)
+                                    # blocks with independent k-selection/µ,
+                                    # all through the STC backend registry --
+                                    # no global collective, so the selection
+                                    # sweeps shard + pipeline across the mesh
+    p_fn: Any = None                # per-layer sparsity schedule hook:
+                                    # p_fn(layer_name, depth) -> p | None
     measure_wire: bool = False      # also return (msgs, global_delta) trees
                                     # so a host WireLedger can account the
                                     # REAL serialized bits per round
@@ -124,7 +132,8 @@ def codec_for(tc: TrainConfig) -> Codec:
     cls = get_protocol_class(tc.protocol)
     fields = {f.name for f in dataclasses.fields(cls)}
     kw = dict(sparsity_up=tc.sparsity_up, sparsity_down=tc.sparsity_down,
-              sign_step=tc.sign_step, local_iters=tc.local_iters)
+              sign_step=tc.sign_step, local_iters=tc.local_iters,
+              chunk_size=tc.chunks, p_fn=tc.p_fn)
     return cls(**{k: v for k, v in kw.items() if k in fields})
 
 
@@ -395,6 +404,9 @@ def main():
     ap.add_argument("--measure-wire", action="store_true",
                     help="serialize every message through the real wire "
                          "format and print measured vs analytic bits")
+    ap.add_argument("--chunks", type=int, default=None,
+                    help="chunked per-(leaf, chunk) selection block size "
+                         "(default: one global flat selection)")
     args = ap.parse_args()
 
     if len(jax.devices()) < 4:
@@ -403,7 +415,8 @@ def main():
     mesh = make_debug_mesh(data=2, model=2)
     cfg = get_smoke_config(args.arch)
     tc = TrainConfig(protocol=args.protocol, lr=0.05, sparsity_up=1 / 50,
-                     sparsity_down=1 / 50, measure_wire=args.measure_wire)
+                     sparsity_down=1 / 50, measure_wire=args.measure_wire,
+                     chunks=args.chunks)
     state = init_train_state(cfg, tc, n_clients=2, key=jax.random.PRNGKey(0))
 
     toks = make_lm_tokens(n_tokens=4 * 128 + 1, vocab=cfg.vocab_size)

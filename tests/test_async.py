@@ -276,6 +276,49 @@ class TestBufferedTrainer:
         for row in tr.arrival_log:          # conservation per round
             assert row["aggregated"] + row["dropped"] == row["arrived"]
 
+    def test_chunked_deadline_inf_bit_identical_to_synchronous(self, data):
+        """Acceptance (ISSUE 5): the deadline=inf bit-identity guarantee
+        must also hold when chunks>1 -- buffered chunked == sync chunked,
+        params AND ledgers AND wire_log."""
+        train, test = data
+        tcfg = TrainerConfig(lr=0.05, seed=0, chunks=16)
+        rounds = 3
+        sync = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                _stc(), tcfg)
+        sync.run(rounds, eval_every=rounds)
+        assert sync.protocol.spec.n_chunks > 1   # really multi-chunk
+        buf = BufferedFederatedTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(), _stc(), tcfg,
+            latency=LatencyModel(mean=3.0, sigma=1.0), deadline=math.inf)
+        buf.run(rounds, eval_every=rounds)
+        np.testing.assert_array_equal(np.asarray(sync.params_vec),
+                                      np.asarray(buf.params_vec))
+        assert sync.bits_up == buf.bits_up
+        assert sync.bits_down == buf.bits_down
+        assert sync.wire_log == buf.wire_log
+        for hs, hb in zip(sync.history, buf.history):
+            for key in hs:
+                assert hs[key] == hb[key], key
+
+    def test_chunked_zero_arrival_round_freezes_every_chunk_state(self, data):
+        """Nothing lands by the deadline: EVERY per-chunk server residual
+        (the (n_chunks, chunk_numel) state stack) must stay frozen."""
+        train, test = data
+        tr = BufferedFederatedTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(), _stc(),
+            TrainerConfig(lr=0.05, seed=0, chunks=16),
+            latency=LatencyModel(mean=50.0, sigma=0.0), deadline=1.0,
+            max_staleness=100)
+        res0 = np.asarray(tr.server_state.residual).copy()
+        n_chunks = tr.protocol.spec.n_chunks
+        assert res0.shape[0] == n_chunks > 1
+        params0 = np.asarray(tr.params_vec).copy()
+        tr.run_round()
+        assert tr.bits_up == 0.0 and tr.wire_log == []
+        np.testing.assert_array_equal(np.asarray(tr.params_vec), params0)
+        np.testing.assert_array_equal(np.asarray(tr.server_state.residual),
+                                      res0)
+
     def test_legacy_codec_without_mask_api_is_rejected(self, data):
         @register_protocol
         @dataclasses.dataclass(frozen=True)
@@ -343,6 +386,31 @@ class TestCheckBench:
         assert len(regressions) == 1 and "slow" in regressions[0]
         joined = "\n".join(report)
         assert "MISSING gone" in joined and "NEW" in joined
+
+    def test_unparsed_rows_are_report_only_not_keyerror(self):
+        """A bench family present in the fresh run but missing (or written
+        by an older vintage without the value key) in the committed BENCH
+        file must be a report-only warning, never a KeyError."""
+        cb = _load_check_bench()
+        payload = {"unit": "us",
+                   "rows": [{"name": "chunked/new", "note": "no value key"},
+                            {"note": "row without a name"},
+                            {"name": "ok", "us": 3.0}]}
+        unparsed: list = []
+        med = cb.medians_by_name(payload, unparsed)
+        assert med == {"ok": 3.0}
+        assert unparsed == ["chunked/new", "<unnamed>"]
+        # and without a collector it still never raises
+        assert cb.medians_by_name(payload) == {"ok": 3.0}
+
+    def test_fresh_only_family_reports_new_rows_without_failing(self):
+        cb = _load_check_bench()
+        base = {"old": 10.0}
+        fresh = {"old": 11.0, "chunked/select": 5.0}
+        report, regressions = cb.compare(base, fresh, tolerance=2.0)
+        assert regressions == []
+        assert any("NEW" in line and "chunked/select" in line
+                   for line in report)
 
     def test_gate_passes_against_committed_baseline(self):
         """End-to-end wiring on the real committed files (huge tolerance: a

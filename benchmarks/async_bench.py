@@ -21,11 +21,15 @@ straggler population, so tight deadlines genuinely drop/delay updates.
 from __future__ import annotations
 
 import math
+import time
 
-from repro.core import make_protocol
+import numpy as np
+
+from repro.core import make_protocol, wire
 from repro.data import make_classification
 from repro.fed import (BufferedFederatedTrainer, FedEnvironment,
                        FederatedTrainer, LatencyModel, TrainerConfig)
+from repro.fed.arrivals import ArrivalSimulator
 from repro.models.paper_models import MODEL_ZOO
 
 # (n_clients, participation) grid: eta = 1/10 ... 1/400 of the paper's §V
@@ -45,6 +49,67 @@ def _proto(name: str):
     if name == "stc":
         return make_protocol("stc", sparsity_up=1 / 50, sparsity_down=1 / 50)
     return make_protocol(name)
+
+
+# fleet-scale sweep: the trainer is out of the loop (no model, no data
+# shards) -- this exercises the SERVER path alone: a 10^5-client arrivals
+# model feeding synthetic sparse uploads through the fused ingest
+# accumulator, the regime the dense (P, numel) decode block cannot reach.
+_FLEET = ((100_000, 1 / 400),)
+_FLEET_NUMEL = 1 << 18
+_MAX_STALENESS = 6
+
+
+def fleet(verbose: bool = True, rounds: int = 8):
+    rows = []
+    p = 1 / 400
+    proto = make_protocol("stc", sparsity_up=p, sparsity_down=p)
+    k = max(int(_FLEET_NUMEL * p), 1)
+    for n_clients, eta in _FLEET:
+        cohort = max(int(round(n_clients * eta)), 1)
+        sim = ArrivalSimulator(_LATENCY, n_clients=n_clients,
+                               deadline=1.0, seed=0)
+        rng = np.random.default_rng(0)
+        state = proto.init_server_state(_FLEET_NUMEL)
+        row = np.zeros(_FLEET_NUMEL, np.float32)
+        ingested = dropped = 0
+        t_ingest = 0.0
+        for rnd in range(rounds):
+            ids = rng.choice(n_clients, size=cohort, replace=False)
+            payloads = []
+            for _ in range(cohort):
+                idx = rng.choice(_FLEET_NUMEL, size=k, replace=False)
+                row[idx] = rng.choice((-1.0, 1.0), size=k) * 0.01
+                payloads.append(wire.encode_ternary_words(row, p))
+                row[idx] = 0.0
+            sim.dispatch(rnd, ids, payloads)
+            arrivals = sim.collect(rnd)
+            kept = [a for a in arrivals
+                    if rnd - a.sent_round <= _MAX_STALENESS]
+            dropped += len(arrivals) - len(kept)
+            if not kept:
+                continue
+            stal = np.asarray([rnd - a.sent_round for a in kept])
+            w = np.asarray(proto.participation_weights(
+                np.ones(len(kept), np.float32), stal), np.float64)
+            t0 = time.perf_counter()
+            acc = proto.make_ingest(_FLEET_NUMEL)
+            for a, wi in zip(kept, w):
+                proto.ingest_wire(acc, a.payload, float(wi))
+            _, state, _ = proto.aggregate_ingest(acc, state)
+            t_ingest += time.perf_counter() - t0
+            ingested += len(kept)
+        ups = ingested / t_ingest if t_ingest > 0 else 0.0
+        stem = f"async/fleet/stc/c{n_clients}"
+        note = (f"rounds={rounds} cohort={cohort} numel={_FLEET_NUMEL} "
+                f"ingest-only timing")
+        rows.append((f"{stem}/uploads_per_s", ups, note))
+        rows.append((f"{stem}/ingested", float(ingested), note))
+        rows.append((f"{stem}/dropped", float(dropped), note))
+        if verbose:
+            print(f"{stem}: {ups:.1f} uploads/s ingested={ingested} "
+                  f"dropped={dropped}")
+    return rows
 
 
 def run(verbose: bool = True, rounds: int = 12, protocols=("stc",)):
@@ -80,6 +145,7 @@ def run(verbose: bool = True, rounds: int = 12, protocols=("stc",)):
                 if verbose:
                     print(f"{stem}: acc={acc:.3f} "
                           f"upMB={tr.bits_up / 8e6:.3f} dropped={dropped}")
+    rows += fleet(verbose=verbose)
     return rows
 
 

@@ -1,0 +1,152 @@
+"""Server ingestion benchmark: fused decode→aggregate vs the dense path.
+
+    PYTHONPATH=src python -m benchmarks.ingest_bench [--smoke]
+
+The fleet regime (P >= 512 uploads/round, numel = 2^20, p = 1/400 -- the
+paper's §V operating point) is where the server's dense ``(P, numel)``
+decode buffer becomes the wall: 2 GiB of fp32 per round at P=512 before a
+single aggregate FLOP.  The fused ingest path
+(:mod:`repro.core.ingest`) scatters every upload's decoded Golomb fields
+straight into ONE O(numel) accumulator, so its peak ingest memory is
+independent of P.
+
+Measured rows (written to ``benchmarks/BENCH_ingest.json``, unit "mixed" --
+report-only in the regression gate, like BENCH_async):
+
+  ingest/fused_uploads_per_s   -- fused ingest throughput at the big point
+  ingest/dense_uploads_per_s   -- dense decode->aggregate throughput
+  ingest/speedup               -- fused / dense (acceptance: >= 5x)
+  ingest/fused_peak_mib_P*     -- tracemalloc peak during ingest, two P's
+  ingest/dense_peak_mib_P*     -- same for the dense decode buffer
+  ingest/identity              -- 1.0 iff fused == dense oracle bitwise
+
+Both timed paths start from the SAME encoded wire batch and end with the
+same downstream compression (``finalize_ingest`` / ``aggregate``), so the
+comparison isolates exactly the ingest stage the PR replaces.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import make_protocol, wire
+
+_MU = 0.01
+
+
+def _make_batch(P: int, n: int, p: float, rng) -> wire.WireBatch:
+    """P synthetic sparse ternary uploads, encoded one row at a time (the
+    dense (P, n) tensor is never materialized -- clients encode clientside)."""
+    k = max(int(n * p), 1)
+    msgs = []
+    row = np.zeros(n, np.float32)
+    for _ in range(P):
+        idx = rng.choice(n, size=k, replace=False)
+        row[idx] = rng.choice((-1.0, 1.0), size=k).astype(np.float32) * _MU
+        msgs.append(wire.encode_ternary_words(row, p))
+        row[idx] = 0.0
+    return wire.concat_messages(msgs)
+
+
+def _fused(codec, batch, w, n, state):
+    acc = codec.make_ingest(n)
+    codec.ingest_wire_batch(acc, batch, w, direction="up")
+    return codec.aggregate_ingest(acc, state), acc
+
+
+def _dense(codec, batch, w, n, state):
+    import jax.numpy as jnp
+    block = wire.decode_ternary_words_batch(batch, codec.sparsity_up)
+    out = codec.aggregate(jnp.asarray(block), state,
+                          mask=jnp.asarray(w, jnp.float32))
+    return out, block
+
+
+def _peak_mib(fn) -> float:
+    tracemalloc.start()
+    fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return peak / 2**20
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    P, n = (32, 1 << 14) if smoke else (512, 1 << 20)
+    p = 1 / 400
+    rng = np.random.default_rng(0)
+    codec = make_protocol("stc", sparsity_up=p, sparsity_down=p)
+    w = np.ones(P, np.float64)
+    state = codec.init_server_state(n)
+
+    batch = _make_batch(P, n, p, rng)
+
+    # ---- correctness first: fused == dense oracle, bitwise -----------------
+    (gd_f, _, _), acc = _fused(codec, batch, w, n, state)
+    oracle = codec.make_ingest(n)
+    block = wire.decode_ternary_words_batch(batch, p)
+    for i in range(P):
+        codec.ingest_dense(oracle, block[i], float(w[i]))
+    gd_o, _, _ = codec.aggregate_ingest(oracle, state)
+    identical = (np.array_equal(np.asarray(acc.sum), np.asarray(oracle.sum))
+                 and np.array_equal(np.asarray(gd_f), np.asarray(gd_o)))
+    del block, oracle
+
+    # ---- throughput --------------------------------------------------------
+    reps = 3 if smoke else 2
+    t_f = min(_timed(lambda: _fused(codec, batch, w, n, state))
+              for _ in range(reps))
+    t_d = min(_timed(lambda: _dense(codec, batch, w, n, state))
+              for _ in range(reps))
+    fused_ups, dense_ups = P / t_f, P / t_d
+    speedup = fused_ups / dense_ups
+
+    # ---- peak ingest memory at two cohort sizes ----------------------------
+    # fused peak must be ~independent of P (the accumulator is O(numel));
+    # the dense buffer grows linearly.  Only the ingest stage is traced.
+    P2 = max(P // 4, 1)
+    batch2 = _make_batch(P2, n, p, rng)
+    w2 = np.ones(P2, np.float64)
+
+    def fused_ingest_only(b, ww):
+        acc = codec.make_ingest(n)
+        codec.ingest_wire_batch(acc, b, ww, direction="up")
+
+    mem = {
+        f"fused_peak_mib_P{P}": _peak_mib(
+            lambda: fused_ingest_only(batch, w)),
+        f"fused_peak_mib_P{P2}": _peak_mib(
+            lambda: fused_ingest_only(batch2, w2)),
+        f"dense_peak_mib_P{P}": _peak_mib(
+            lambda: wire.decode_ternary_words_batch(batch, p)),
+        f"dense_peak_mib_P{P2}": _peak_mib(
+            lambda: wire.decode_ternary_words_batch(batch2, p)),
+    }
+
+    note = f"P={P} n=2^{n.bit_length() - 1} p=1/{int(round(1 / p))}"
+    rows = [
+        ("ingest/fused_uploads_per_s", fused_ups, note),
+        ("ingest/dense_uploads_per_s", dense_ups, note),
+        ("ingest/speedup", speedup, note + " acceptance>=5x"),
+        ("ingest/identity", 1.0 if identical else 0.0,
+         "fused == dense oracle, bitwise"),
+    ] + [(f"ingest/{k}", v, note) for k, v in mem.items()]
+    if verbose:
+        for name, val, derived in rows:
+            print(f"{name},{val:.4f},{derived}")
+    if not identical:
+        raise AssertionError("fused ingest diverged from the dense oracle")
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    run(verbose=True, smoke="--smoke" in sys.argv)

@@ -6,6 +6,12 @@ per (arch x shape x mesh):
     compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
     memory term     = HLO_bytes_per_chip / HBM_bw
     collective term = wire_bytes_per_chip / link_bw
+    ingest term     = measured_server_ingest_bytes_per_round / NIC_bw
+
+The ingest term comes from the dry-run's WireLedger measurement (one
+sampled client update encoded through the codec's real wire format, scaled
+to the cohort); it is reported alongside the per-step terms but kept out of
+``dominant`` because the buffered server overlaps ingest with compute.
 
 cost_analysis() on the SPMD-partitioned executable reports PER-CHIP figures
 (verified against analytic parameter/argument sizes in EXPERIMENTS.md
@@ -28,6 +34,7 @@ from repro.configs import INPUT_SHAPES, get_config
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+SERVER_NIC_BW = 12.5e9  # 100 Gb/s front-end NIC: client uploads enter here
 DEFAULT_GROUP = 16  # model-axis size; collectives are predominantly TP
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
@@ -76,12 +83,20 @@ def analyze(rec: dict) -> dict:
     dominant = max(terms, key=terms.get)
     mf = model_flops(rec)
     hlo_global = rec["flops"] * chips
+    # measured server ingest (WireLedger figure recorded by the dry-run):
+    # wall time for one round's client uploads to cross the front-end NIC.
+    # Reported alongside the per-step terms, not folded into `dominant` --
+    # ingest overlaps training steps in the buffered server.
+    si = rec.get("server_ingest")
+    t_ingest = (si["bytes_up_round"] / SERVER_NIC_BW) if si else 0.0
     return {
         **rec,
         "chips": chips,
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
         "t_collective_s": t_coll,
+        "t_ingest_s": t_ingest,
+        "ingest_bytes_round": si["bytes_up_round"] if si else 0.0,
         "dominant": dominant,
         "model_flops": mf,
         "useful_ratio": mf / hlo_global if hlo_global else 0.0,
@@ -118,14 +133,15 @@ def load_records(variant: str | None = None):
 
 def table(recs) -> str:
     lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
-             "dominant | MODEL/HLO |",
-             "|---|---|---|---|---|---|---|---|"]
+             "ingest s | dominant | MODEL/HLO |",
+             "|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
         a = analyze(r)
+        ingest = (f"{a['t_ingest_s']:.3e}" if a["t_ingest_s"] else "--")
         lines.append(
             f"| {a['arch']} | {a['shape']} | {a['mesh']} "
             f"| {a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} "
-            f"| {a['t_collective_s']:.3e} | **{a['dominant']}** "
+            f"| {a['t_collective_s']:.3e} | {ingest} | **{a['dominant']}** "
             f"| {a['useful_ratio']:.3f} |")
     return "\n".join(lines)
 
@@ -143,6 +159,10 @@ def main():
         a = analyze(r)
         print(f"{a['arch']} x {a['shape']} x {a['mesh']}: dominant="
               f"{a['dominant']} -> {suggestion(a)}")
+        if a["t_ingest_s"]:
+            print(f"  server ingest (measured): "
+                  f"{a['ingest_bytes_round'] / 2**20:.2f} MiB/round = "
+                  f"{a['t_ingest_s']:.3e} s on the front-end NIC")
     if "--write" in sys.argv:
         out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                            "roofline_table.md")

@@ -25,6 +25,7 @@ BENCH_STC_PATH = os.path.join(_HERE, "BENCH_stc.json")
 BENCH_WIRE_PATH = os.path.join(_HERE, "BENCH_wire.json")
 BENCH_ASYNC_PATH = os.path.join(_HERE, "BENCH_async.json")
 BENCH_CHUNKED_PATH = os.path.join(_HERE, "BENCH_chunked.json")
+BENCH_INGEST_PATH = os.path.join(_HERE, "BENCH_ingest.json")
 
 
 def _write_bench(path: str, rows, unit: str = "us") -> None:
@@ -64,6 +65,10 @@ def write_bench_chunked(rows) -> None:
     _write_bench(BENCH_CHUNKED_PATH, rows)
 
 
+def write_bench_ingest(rows) -> None:
+    _write_bench(BENCH_INGEST_PATH, rows, unit="mixed")
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
@@ -71,10 +76,12 @@ def main() -> None:
     from benchmarks import kernel_bench, paper_claims
 
     rows = []
-    which = args or ["golomb", "wire", "kernels", "chunked", "async", "fig3",
-                     "fig5", "fig2", "table4", "fig8", "roofline"]
+    which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
+                     "async", "fig3", "fig5", "fig2", "table4", "fig8",
+                     "roofline"]
     if quick:
-        which = args or ["golomb", "wire", "kernels", "chunked", "fig3"]
+        which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
+                         "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -92,6 +99,12 @@ def main() -> None:
             crows = chunked_bench.run(verbose=False)
             write_bench_chunked(crows)
             rows += crows
+        elif name == "ingest":
+            from benchmarks import ingest_bench
+            irows = ingest_bench.run(verbose=False, smoke=quick)
+            if not quick:    # quick = smoke scale; keep the tracked file
+                write_bench_ingest(irows)    # at the fleet operating point
+            rows += irows
         elif name == "async":
             from benchmarks import async_bench
             arows = async_bench.run(verbose=False)

@@ -40,4 +40,7 @@ python scripts/smoke_protocols.py
 stage protocol-smoke-chunked
 python scripts/smoke_protocols.py --chunks 64
 
+stage ingest-smoke
+python -m benchmarks.ingest_bench --smoke
+
 stage done

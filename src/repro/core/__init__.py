@@ -7,6 +7,7 @@ Public API:
     wire         -- vectorized/batched wire-format packer (measured bits)
     protocols    -- Protocol objects: baseline / fedavg / signsgd / topk / stc
     chunking     -- ChunkSpec + chunk_codec: per-(layer, chunk) block codecs
+    ingest       -- fused decode→aggregate server accumulators (O(numel))
     caching      -- server partial-sum cache P^(s) for partial participation
 """
 
@@ -40,7 +41,10 @@ from .golomb import (
 )
 from .wire import (
     WireBatch,
+    WireDecodeError,
     WireMessage,
+    decode_ternary_fields,
+    decode_ternary_fields_batch,
     decode_ternary_words,
     decode_ternary_words_batch,
     encode_ternary_words,
@@ -48,8 +52,10 @@ from .wire import (
     get_wire_backend,
     pack_sign_words,
     register_wire_backend,
+    sign_plane_bits,
     unpack_sign_words,
 )
+from .ingest import IngestAccumulator
 from .protocols import (
     PROTOCOLS,
     Codec,
@@ -88,10 +94,12 @@ __all__ = [
     "entropy_sparse", "entropy_sparse_ternary", "golomb_b_star",
     "golomb_position_bits", "stc_message_bits", "stc_stream_bound_bits",
     "ternary_dense_bits",
-    "WireMessage", "WireBatch", "encode_ternary_words",
+    "WireMessage", "WireBatch", "WireDecodeError", "encode_ternary_words",
     "encode_ternary_words_batch", "decode_ternary_words",
-    "decode_ternary_words_batch", "pack_sign_words", "unpack_sign_words",
-    "get_wire_backend", "register_wire_backend",
+    "decode_ternary_words_batch", "decode_ternary_fields",
+    "decode_ternary_fields_batch", "pack_sign_words", "unpack_sign_words",
+    "sign_plane_bits", "get_wire_backend", "register_wire_backend",
+    "IngestAccumulator",
     "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
     "registered_protocols", "get_protocol_class",
     "ChunkSpec", "ChunkedCodec", "chunk_codec", "chunk_spec_from_sizes",

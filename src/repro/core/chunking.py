@@ -272,6 +272,10 @@ class ChunkedCodec(Codec):
     def wire_static_size(self):
         return self.base.wire_static_size
 
+    @property
+    def supports_ingest(self):
+        return self.base.supports_ingest
+
     def _chunk_codecs(self):
         """Per-chunk codec (the layer's, after the p_fn schedule)."""
         return tuple(self.layer_codecs[li] for li in self.spec.chunk_layer)
@@ -417,6 +421,58 @@ class ChunkedCodec(Codec):
         if isinstance(msg, wire.ChunkedWireMessage):
             msg = msg.batch
         return self.decode_wire_batch(msg, direction=direction)[0]
+
+    # -- fused ingest: every chunk sub-stream scatters into its flat slice --
+    def ingest_wire(self, acc, msg, weight, *, direction: str = "up"):
+        if isinstance(msg, wire.ChunkedWireMessage):
+            msg = msg.batch
+        self.ingest_wire_batch(acc, msg, np.asarray([weight], np.float64),
+                               direction=direction)
+
+    def ingest_wire_batch(self, acc, batch: wire.ChunkedWireBatch, weights,
+                          *, direction: str = "up"):
+        spec = self.spec
+        w = np.asarray(weights, np.float64)
+        groups = self._groups()
+        for i in range(batch.n_msgs):
+            acc.begin_message(float(w[i]), bits=float(batch.bit_len[i])
+                              + self._header_bits_per_msg())
+            # chunks of one message cover disjoint flat slices, so the
+            # scatter order within the message cannot change any coordinate
+            for (valid, codec, idxs), wb in zip(groups, batch.batches):
+                G = len(idxs)
+                for j, ci in enumerate(idxs):
+                    codec.ingest_wire_chunk(
+                        acc, wb.message(i * G + j), float(w[i]),
+                        direction=direction, offset=spec.chunk_start[ci])
+
+    def finalize_ingest(self, combined, server_state):
+        spec = self.spec
+        if self.base.chunk_blocks:
+            blocks = jnp.asarray(spec.split(np.asarray(combined)))
+            ks = spec.chunk_ks(self._chunk_ps("down"))
+            # P=1 block tensor: the fused path's plain mean is the identity
+            out_blocks, server_state, _ = self.base.aggregate_chunk_blocks(
+                blocks[None], server_state, ks=ks)
+        elif self.base.init_server_state(1) is None:
+            # stateless elementwise base (signsgd): chunking is a no-op
+            return self.base.finalize_ingest(combined, server_state)
+        else:
+            blocks = spec.split(np.asarray(combined))
+            out_blocks = jnp.zeros((spec.n_chunks, spec.chunk_numel),
+                                   jnp.float32)
+            for valid, codec, idxs in self._groups():
+                sub = jnp.asarray(blocks[np.asarray(idxs), :valid])
+                st_g = _take_chunks(server_state, idxs, valid, lead=0)
+                o_g, st_g, _ = jax.vmap(codec.finalize_ingest)(sub, st_g)
+                out_blocks = out_blocks.at[np.asarray(idxs), :valid].set(o_g)
+                server_state = _put_chunks(server_state, st_g, idxs, valid,
+                                           lead=0)
+        out = spec.merge(out_blocks)
+        stats = CompressionStats(nnz=jnp.sum(out != 0),
+                                 numel=jnp.asarray(spec.numel),
+                                 mu=jnp.asarray(0.0))
+        return out, server_state, stats
 
     def _header_bits_per_msg(self) -> float:
         # every chunk carries the base codec's side information independently

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import golomb, wire
+from .ingest import IngestAccumulator
 from .compression import (
     CompressionStats,
     get_stc_backend,
@@ -344,6 +345,67 @@ class Codec:
         can assert ``measured <= bound`` round by round."""
         return None
 
+    # -- fused decode→aggregate ingestion (repro.core.ingest) ----------------
+    # A codec with ``supports_ingest = True`` can consume a round as a STREAM
+    # of arriving messages: each upload scatters into one O(numel)
+    # :class:`IngestAccumulator` at arrival time (``ingest_wire`` /
+    # ``ingest_dense``), and ``aggregate_ingest`` finalizes the round from
+    # the accumulator alone -- the dense (P, numel) message block never
+    # exists.  Contract (property-tested): ``ingest_wire*`` is bit-identical
+    # to decoding every message dense and feeding it through
+    # ``ingest_dense`` (the oracle), and both share ``finalize_ingest``.
+
+    supports_ingest: ClassVar[bool] = False
+
+    def make_ingest(self, numel: int) -> IngestAccumulator:
+        """A fresh per-round accumulator sized for the flat message vector."""
+        if not self.supports_ingest:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no ingest path")
+        return IngestAccumulator(numel)
+
+    def ingest_dense(self, acc: IngestAccumulator, vec: np.ndarray,
+                     weight: float) -> None:
+        """One dense (decoded, or never wire-encoded) message into the
+        accumulator -- the fused wire paths' bit-exactness oracle."""
+        acc.begin_message(weight)
+        acc.add_dense(vec, weight)
+
+    def ingest_wire_chunk(self, acc: IngestAccumulator, msg, weight: float,
+                          *, direction: str = "up", offset: int = 0) -> None:
+        """Scatter ONE wire sub-stream at flat ``offset`` (no per-message
+        bookkeeping: chunked codecs call this once per chunk)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no wire ingest path")
+
+    def ingest_wire(self, acc: IngestAccumulator, msg, weight: float, *,
+                    direction: str = "up") -> None:
+        """One arriving wire message: account its weight + measured bits,
+        then scatter its decoded fields into the accumulator."""
+        acc.begin_message(weight, bits=self.measured_message_bits(msg))
+        self.ingest_wire_chunk(acc, msg, weight, direction=direction)
+
+    def ingest_wire_batch(self, acc: IngestAccumulator, batch, weights, *,
+                          direction: str = "up") -> None:
+        """A whole encoded round, message-major.  The default loops
+        :meth:`ingest_wire`; codecs with a batched field decoder (STC)
+        override it with one fused decode + scatter."""
+        for i, w in enumerate(np.asarray(weights, np.float64)):
+            self.ingest_wire(acc, batch.message(i), float(w),
+                             direction=direction)
+
+    def finalize_ingest(self, combined, server_state):
+        """Downstream compression of the accumulator's weighted mean; the
+        ingest twin of the tail of :meth:`aggregate`.  Returns
+        ``(global_delta, new_server_state, stats)``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no ingest path")
+
+    def aggregate_ingest(self, acc: IngestAccumulator, server_state):
+        """Finalize a round straight from the accumulator (both the fused
+        wire path and the dense oracle end here, so they agree bitwise)."""
+        return self.finalize_ingest(acc.combined(), server_state)
+
     # -- tree path (distributed shard_map trainer) ---------------------------
     def has_client_state(self) -> bool:
         return self.init_client_state(0) is not None
@@ -460,6 +522,7 @@ class SignSGDCodec(Codec):
 
     wire_format: ClassVar[bool] = True      # dense sign plane, 1 bit/coord
     wire_static_size: ClassVar[bool] = True  # numel bits, exactly, always
+    supports_ingest: ClassVar[bool] = True
 
     def encode(self, delta, state):
         msg, stats = sign_compress(delta, self.sign_step)
@@ -474,6 +537,22 @@ class SignSGDCodec(Codec):
 
     def wire_bound_bits(self, numel, nnz, direction="up"):
         return float(numel)                 # measured == analytic, exactly
+
+    # ---- fused ingest: the vote tally IS the weighted plane sum ----
+    def ingest_wire_chunk(self, acc, msg, weight, *, direction="up",
+                          offset=0):
+        bits01 = wire.sign_plane_bits(msg, backend=self.wire_backend)
+        acc.add_sign_plane(bits01, self.sign_step, weight, offset=offset)
+
+    def finalize_ingest(self, combined, server_state):
+        # sign(weighted mean) == sign(weighted vote tally): the arrived
+        # mass is positive, and the wire planes are exactly ±step.  Ingest
+        # aggregates the WIRE truth (a dense message's exact zeros were
+        # already -step on the wire -- see wire.pack_sign_words).
+        out = self.sign_step * jnp.sign(jnp.asarray(combined))
+        _, stats = _identity(out)
+        stats = stats._replace(mu=jnp.asarray(self.sign_step))
+        return out, server_state, stats
 
     def aggregate(self, msgs, server_state, mask=None, staleness=None):
         weights = None
@@ -593,6 +672,7 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
     wire_format: ClassVar[bool] = True      # Golomb position stream (Alg. 3)
     wire_header_bits: ClassVar[float] = 32.0  # fp32 µ per message (Eq. 15)
     chunk_blocks: ClassVar[bool] = True     # fused (P, chunk, W) block path
+    supports_ingest: ClassVar[bool] = True
 
     def init_server_state(self, numel: int) -> ResidualState:
         return init_residual(jnp.zeros((numel,), jnp.float32))
@@ -635,6 +715,48 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
         mean = self.combine(msgs, mask, staleness)
         out, new_res, stats = be.compress_with_residual(
             mean, server_state.residual, self.sparsity_down)
+        return out, ResidualState(residual=new_res), stats
+
+    # ---- fused ingest: Golomb fields -> accumulator scatter ----
+    def ingest_wire_chunk(self, acc, msg, weight, *, direction="up",
+                          offset=0):
+        pos, signs = wire.decode_ternary_fields(
+            msg, self._wire_p(direction), backend=self.wire_backend)
+        acc.scatter_ternary(pos, signs, msg.mu, weight, offset=offset)
+
+    #: fused-ingest decode block: rows are grouped so each multi-segment
+    #: decode pass touches at most this many stream words, keeping the
+    #: decode workspace bounded regardless of how many clients arrive.
+    ingest_block_words: ClassVar[int] = 1 << 16
+
+    def ingest_wire_batch(self, acc, batch, weights, *, direction="up"):
+        # multi-segment field decode + one scatter per bounded word block
+        # (bitwise the sequential ingest_wire loop: np.add.at applies in
+        # element order, and the fields come out message-major)
+        w = np.asarray(weights, np.float64)
+        for i in range(batch.n_msgs):
+            acc.begin_message(float(w[i]),
+                              bits=float(batch.bit_len[i])
+                              + self.wire_header_bits)
+        p = self._wire_p(direction)
+        i0, P = 0, batch.n_msgs
+        while i0 < P:
+            i1, words = i0, 0
+            while i1 < P and (i1 == i0
+                              or words + int(batch.word_count[i1])
+                              <= self.ingest_block_words):
+                words += int(batch.word_count[i1])
+                i1 += 1
+            sub = batch.rows(i0, i1)
+            seg, pos, signs = wire.decode_ternary_fields_batch(
+                sub, p, backend=self.wire_backend)
+            acc.scatter_ternary_batch(seg, pos, signs, sub.mu, w[i0:i1])
+            i0 = i1
+
+    def finalize_ingest(self, combined, server_state):
+        be = get_stc_backend(self.backend)
+        out, new_res, stats = be.compress_with_residual(
+            jnp.asarray(combined), server_state.residual, self.sparsity_down)
         return out, ResidualState(residual=new_res), stats
 
     # ---- fused chunked block path (repro.core.chunking) ----
@@ -713,6 +835,8 @@ class TernQuantCodec(_ErrorFeedbackMixin, Codec):
 
     theta: float = 0.75                     # TWN threshold factor
 
+    supports_ingest: ClassVar[bool] = True  # dense ingest only (no wire)
+
     def init_server_state(self, numel: int) -> ResidualState:
         return init_residual(jnp.zeros((numel,), jnp.float32))
 
@@ -724,6 +848,11 @@ class TernQuantCodec(_ErrorFeedbackMixin, Codec):
         mean = self.combine(msgs, mask, staleness)
         return compress_with_feedback(
             mean, server_state, lambda v: ternary_quantize(v, self.theta))
+
+    def finalize_ingest(self, combined, server_state):
+        return compress_with_feedback(
+            jnp.asarray(combined), server_state,
+            lambda v: ternary_quantize(v, self.theta))
 
     def upload_bits(self, numel: int) -> float:
         return golomb.ternary_dense_bits(numel)

@@ -33,10 +33,16 @@ is the host scatter above; ``"kernel"`` expands chunks to a bit tensor and
 packs 32-bit words on-device through the Pallas kernel in
 :mod:`repro.kernels.bitpack`, so TPU and CPU share one API.
 
-Decode is vectorized too: one ``np.unpackbits``, one ``searchsorted`` over
-the zero positions giving each candidate terminator its successor, a k-step
-pointer chase (array indexing, not bit parsing), then gathers for remainders
-and signs.
+Decode is vectorized end to end -- and multi-segment: ONE pass parses every
+client stream of a word-aligned batch.  One bit unpack (host ``unpackbits``
+or the Pallas :mod:`repro.kernels.wiredecode` kernel on the ``"kernel"``
+backend), one ``searchsorted`` over the zero positions giving each candidate
+terminator its successor (capped at its own segment's data end), then a
+pointer-doubling transitive closure -- ``O(Z log Z)`` array ops, no Python
+chase -- marks each segment's terminator chain; batch gathers recover
+remainders and signs and a segmented cumsum the positions.  Truncated or
+corrupt payloads (``bit_len`` past the buffer, a run past ``numel``, a
+stream ending mid-codeword) raise :class:`WireDecodeError` on every path.
 """
 
 from __future__ import annotations
@@ -53,18 +59,30 @@ __all__ = [
     "ChunkedWireBatch",
     "ChunkedWireMessage",
     "WireBackend",
+    "WireDecodeError",
     "register_wire_backend",
     "get_wire_backend",
     "encode_ternary_words",
     "encode_ternary_words_batch",
     "decode_ternary_words",
     "decode_ternary_words_batch",
+    "decode_ternary_fields",
+    "decode_ternary_fields_batch",
     "pack_sign_words",
     "unpack_sign_words",
+    "sign_plane_bits",
     "concat_messages",
     "words_to_bits",
     "words_to_bytes",
 ]
+
+
+class WireDecodeError(ValueError):
+    """A wire payload failed validation during decode: the advertised
+    ``bit_len`` overruns the word buffer, a unary run crosses the stream
+    end, the stream ends mid-codeword, or a decoded position overflows the
+    target tensor.  Subclasses :class:`ValueError` so pre-existing callers
+    catching the old untyped errors keep working."""
 
 _U64 = np.uint64
 _MAX_B_STAR = 30  # tail chunk must fit 63 bits: 31 ones + b* + 2
@@ -117,6 +135,17 @@ class WireBatch(NamedTuple):
         return WireMessage(self.words[s : s + c], int(self.bit_len[i]),
                            float(self.mu[i]), self.numel, int(self.nnz[i]))
 
+    def rows(self, i0: int, i1: int) -> "WireBatch":
+        """View of message rows ``[i0, i1)`` as their own batch (no copy --
+        rows are word-contiguous by construction).  Lets the ingest path
+        decode a fleet round in bounded-workspace blocks."""
+        w0 = int(self.word_start[i0]) if i1 > i0 else 0
+        w1 = (int(self.word_start[i1 - 1] + self.word_count[i1 - 1])
+              if i1 > i0 else 0)
+        return WireBatch(self.words[w0:w1], self.word_start[i0:i1] - w0,
+                         self.word_count[i0:i1], self.bit_len[i0:i1],
+                         self.mu[i0:i1], self.nnz[i0:i1], self.numel)
+
     def total_bits(self) -> float:
         return float(self.bit_len.sum())
 
@@ -148,6 +177,20 @@ class ChunkedWireBatch(NamedTuple):
 
     def total_bits(self) -> float:
         return float(self.bit_len.sum())
+
+    def message(self, i: int) -> "ChunkedWireMessage":
+        """Message ``i`` as a standalone single-row chunked batch (per-group
+        word buffers are copies of just that message's rows, so the view is
+        safe to ship through the arrival simulator independently)."""
+        subs = []
+        for wb, ids in zip(self.batches, self.chunk_ids):
+            g = len(ids)
+            subs.append(concat_messages([wb.message(i * g + j)
+                                         for j in range(g)]))
+        return ChunkedWireMessage(ChunkedWireBatch(
+            tuple(subs), self.chunk_ids, self.chunk_valid,
+            self.bit_len[i : i + 1], self.nnz[i : i + 1], 1, self.numel,
+            self.n_chunks))
 
 
 class ChunkedWireMessage(NamedTuple):
@@ -205,17 +248,21 @@ def _bytes_to_words(payload: np.ndarray) -> np.ndarray:
 
 
 class WireBackend(NamedTuple):
-    """How chunk streams and dense bit planes become uint32 words.
+    """How chunk streams and dense bit planes become uint32 words -- and back.
 
     ``pack_chunks(vals, lens, offs, total_bits)``: uint64 ``(value, length)``
     chunk arrays at exclusive-scan bit offsets -> canonical uint32 words.
     ``pack_bits(bits)``: a dense uint8 0/1 array -> canonical uint32 words.
-    Both must be bit-identical across backends.
+    ``unpack_bits(words)``: the decode inverse -- ALL ``32 * n_words`` MSB-
+    first bits as uint8 0/1 (``None`` falls back to the numpy route, so
+    pre-existing backend registrations stay valid).
+    All must be bit-identical across backends.
     """
 
     name: str
     pack_chunks: Callable
     pack_bits: Callable
+    unpack_bits: Callable | None = None
 
 
 def _or_group_sorted(u64: np.ndarray, idx: np.ndarray,
@@ -264,6 +311,10 @@ def _pack_bits_numpy(bits: np.ndarray) -> np.ndarray:
     return _bytes_to_words(np.packbits(np.asarray(bits, np.uint8)))
 
 
+def _unpack_bits_numpy(words: np.ndarray) -> np.ndarray:
+    return words_to_bits(words, 32 * int(np.asarray(words).size))
+
+
 def _chunks_to_bits(vals: np.ndarray, lens: np.ndarray, offs: np.ndarray,
                     total_bits: int) -> np.ndarray:
     """Expand (value, length) chunks at explicit bit offsets into 0/1.
@@ -284,7 +335,8 @@ def _chunks_to_bits(vals: np.ndarray, lens: np.ndarray, offs: np.ndarray,
 
 
 WIRE_BACKENDS: dict[str, WireBackend] = {
-    "numpy": WireBackend("numpy", _scatter_chunks_numpy, _pack_bits_numpy),
+    "numpy": WireBackend("numpy", _scatter_chunks_numpy, _pack_bits_numpy,
+                         _unpack_bits_numpy),
 }
 
 
@@ -294,7 +346,7 @@ def register_wire_backend(backend: WireBackend) -> None:
 
 def _make_kernel_backend() -> WireBackend:
     # lazy: keeps core import-light (layering: kernels -> core, never back)
-    from repro.kernels import pack_bits_words
+    from repro.kernels import pack_bits_words, unpack_bits_words
 
     def pack_bits(bits: np.ndarray) -> np.ndarray:
         return np.asarray(pack_bits_words(np.asarray(bits, np.uint8)))
@@ -304,7 +356,22 @@ def _make_kernel_backend() -> WireBackend:
         # assembly itself runs as the Pallas packing kernel
         return pack_bits(_chunks_to_bits(vals, lens, offs, total_bits))
 
-    return WireBackend("kernel", pack_chunks, pack_bits)
+    def unpack_bits(words: np.ndarray) -> np.ndarray:
+        # per-word bit extraction on-device (the dense half of decode); the
+        # chain/field logic stays the host's vectorized scan, mirroring the
+        # encode-side split
+        return np.asarray(unpack_bits_words(np.ascontiguousarray(words)))
+
+    return WireBackend("kernel", pack_chunks, pack_bits, unpack_bits)
+
+
+def _backend_unpack(backend: str, words: np.ndarray) -> np.ndarray:
+    """All ``32 * n_words`` stream bits through the named backend (entries
+    registered before the decode API fall back to the numpy route)."""
+    be = get_wire_backend(backend)
+    if be.unpack_bits is None:
+        return _unpack_bits_numpy(words)
+    return be.unpack_bits(words)
 
 
 def get_wire_backend(name: str) -> WireBackend:
@@ -477,60 +544,166 @@ def encode_ternary_words_batch(tensors: np.ndarray, p: float, *,
 
 
 # ---------------------------------------------------------------------------
-# decode (vectorized Algorithm 4)
+# decode (vectorized Algorithm 4, multi-segment)
 # ---------------------------------------------------------------------------
 
 
-def decode_ternary_words(msg: WireMessage, p: float) -> np.ndarray:
-    """Vectorized Algorithm 4: unpack a word stream back to the flat tensor.
+def _decode_stream_fields(bits: np.ndarray, seg_start: np.ndarray,
+                          seg_len: np.ndarray, numel: int,
+                          b: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Parse every segment's Golomb codewords out of ONE unpacked bit array.
 
-    One ``unpackbits`` + one ``searchsorted`` building terminator successor
-    links, an O(nnz) pointer chase, then batch gathers for remainders/signs.
+    ``bits`` covers ALL ``32 * n_words`` stream bits (word padding included);
+    segment ``i`` owns ``[seg_start[i], seg_start[i] + seg_len[i])``.  A
+    codeword terminator is a 0-bit whose successor terminator sits ``b + 2``
+    bits past it: one ``searchsorted`` over the zero positions builds those
+    links for every candidate at once (final terminators -- landing exactly
+    on their segment's data end -- and overruns point at a sentinel), then a
+    pointer-doubling transitive closure marks each segment's chain from its
+    first zero in ``O(Z log Z)`` array ops.  Padding zeros overrun their
+    segment end, so a reached overrun IS a truncated codeword; every active
+    segment must reach a final terminator or the stream ended mid-codeword.
+    (A corrupt segment's chain may escape into a neighbour's zeros -- that
+    only ADDS failure flags, never removes one, so valid batches are immune.)
+
+    Returns ``(cw_seg, positions, signs)``: the owning segment index, decoded
+    tensor position and ±1.0 sign of every codeword, segment-major in stream
+    order.  Raises :class:`WireDecodeError` on any corruption.
     """
-    b = _b_star_checked(p)
-    out = np.zeros(msg.numel, np.float32)
-    if msg.bit_len == 0:
-        return out
-    bits = words_to_bits(msg.words, msg.bit_len)
-    zeros = np.flatnonzero(bits == 0)
-    if zeros.size == 0:
-        raise ValueError("corrupt golomb stream: no unary terminator")
-    succ = np.searchsorted(zeros, zeros + b + 2)
-    terms = []
-    j = int(np.searchsorted(zeros, 0))
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64),
+             np.zeros(0, np.float32))
+    active = np.flatnonzero(seg_len > 0)
+    if active.size == 0:
+        return empty
+    seg_end = seg_start + seg_len
+    zeros = np.flatnonzero(bits == 0).astype(np.int64)
+    Z = zeros.size
+    if Z == 0:
+        raise WireDecodeError("corrupt golomb stream: no unary terminator")
+    seg_of = np.searchsorted(seg_start, zeros, side="right") - 1
+    nxt = zeros + b + 2
+    is_final = nxt == seg_end[seg_of]
+    overrun = nxt > seg_end[seg_of]
+    succ = np.full(Z + 1, Z, np.int64)          # sentinel self-loop at Z
+    interior = ~(is_final | overrun)
+    succ[:Z][interior] = np.searchsorted(zeros, nxt[interior])
+    seeds = np.searchsorted(zeros, seg_start[active])
+    if np.any(seeds >= Z):
+        raise WireDecodeError("corrupt golomb stream: no unary terminator")
+    reached = np.zeros(Z + 1, bool)
+    reached[seeds] = True
+    jump = succ                                  # covers 2^k steps at iter k
     while True:
-        if j >= zeros.size:
-            raise ValueError("corrupt golomb stream: truncated codeword")
-        t = int(zeros[j])
-        if t + b + 2 > msg.bit_len:
-            raise ValueError("corrupt golomb stream: truncated codeword")
-        terms.append(j)
-        if t + b + 2 == msg.bit_len:
+        idx = np.flatnonzero(reached[:Z])
+        reached[jump[idx]] = True
+        if np.count_nonzero(reached[:Z]) == idx.size:
             break
-        j = int(succ[j])
-    T = zeros[np.asarray(terms)]
+        jump = jump[jump]
+    sel = reached[:Z]
+    if np.any(sel & overrun):
+        raise WireDecodeError("corrupt golomb stream: truncated codeword")
+    ok = np.zeros(len(seg_start), bool)
+    ok[seg_of[sel & is_final]] = True
+    if not ok[active].all():
+        raise WireDecodeError("corrupt golomb stream: truncated codeword")
+    T = zeros[sel]                               # terminators, stream order
+    cw_seg = seg_of[sel]
+    first = np.ones(T.size, bool)
+    first[1:] = cw_seg[1:] != cw_seg[:-1]
+    fidx = np.flatnonzero(first)
     starts = np.empty_like(T)
-    starts[0] = 0
-    starts[1:] = T[:-1] + b + 2
-    q = (T - starts).astype(np.int64)
+    starts[fidx] = seg_start[cw_seg[fidx]]
+    nonfirst = np.flatnonzero(~first)
+    starts[nonfirst] = T[nonfirst - 1] + b + 2
+    q = T - starts
     if b:
-        rbits = bits[T[:, None] + 1 + np.arange(b)]
+        rbits = bits[T[:, None] + 1 + np.arange(b)].astype(np.int64)
         r = rbits @ (1 << np.arange(b - 1, -1, -1, dtype=np.int64))
     else:
         r = np.zeros_like(q)
-    sign = np.where(bits[T + b + 1] == 1, 1.0, -1.0).astype(np.float32)
-    positions = np.cumsum(q * (1 << b) + r + 1) - 1
-    if positions[-1] >= msg.numel:
-        raise ValueError("corrupt golomb stream: position overflows tensor")
-    out[positions] = sign * np.float32(msg.mu)
+    signs = np.where(bits[T + b + 1] == 1, np.float32(1.0), np.float32(-1.0))
+    gaps = q * (np.int64(1) << np.int64(b)) + r + 1
+    cum = np.cumsum(gaps)
+    seg_base = cum[fidx] - gaps[fidx]            # segmented cumsum rebase
+    counts = np.diff(np.append(fidx, T.size))
+    positions = cum - np.repeat(seg_base, counts) - 1
+    last = np.append(fidx[1:], T.size) - 1       # gaps >= 1: max is the last
+    if np.any(positions[last] >= numel):
+        raise WireDecodeError(
+            "corrupt golomb stream: position overflows tensor")
+    return cw_seg, positions, signs
+
+
+def _check_bit_len(bit_len, word_count) -> None:
+    if np.any(np.asarray(bit_len) > 32 * np.asarray(word_count)):
+        raise WireDecodeError(
+            "corrupt wire payload: bit_len past the word buffer")
+
+
+def decode_ternary_fields(msg: WireMessage, p: float, *,
+                          backend: str = "numpy"
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """One message's coded ``(positions, signs)`` -- no dense scatter.
+
+    The fused ingest path (:mod:`repro.core.ingest`) consumes these fields
+    directly; :func:`decode_ternary_words` adds the scatter on top.
+    """
+    b = _b_star_checked(p)
+    if msg.bit_len == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.float32)
+    words = np.ascontiguousarray(msg.words)
+    _check_bit_len(msg.bit_len, words.size)
+    bits = _backend_unpack(backend, words)
+    _, positions, signs = _decode_stream_fields(
+        bits, np.zeros(1, np.int64), np.asarray([msg.bit_len], np.int64),
+        msg.numel, b)
+    return positions, signs
+
+
+def decode_ternary_fields_batch(batch: WireBatch, p: float, *,
+                                backend: str = "numpy"
+                                ) -> tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    """All messages' ``(seg, positions, signs)`` in ONE decode pass.
+
+    ``seg`` maps every codeword to its message row.  One hoisted unpack of
+    the shared word buffer + one multi-segment field scan -- no per-client
+    Python loop or repeated ``unpackbits`` views.
+    """
+    b = _b_star_checked(p)
+    if batch.n_msgs == 0 or int(batch.bit_len.sum()) == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32))
+    _check_bit_len(batch.bit_len, batch.word_count)
+    bits = _backend_unpack(backend, batch.words)
+    return _decode_stream_fields(
+        bits, (32 * batch.word_start).astype(np.int64),
+        batch.bit_len.astype(np.int64), batch.numel, b)
+
+
+def decode_ternary_words(msg: WireMessage, p: float, *,
+                         backend: str = "numpy") -> np.ndarray:
+    """Vectorized Algorithm 4: unpack a word stream back to the flat tensor."""
+    out = np.zeros(msg.numel, np.float32)
+    positions, signs = decode_ternary_fields(msg, p, backend=backend)
+    if positions.size:
+        out[positions] = signs * np.float32(msg.mu)
     return out
 
 
-def decode_ternary_words_batch(batch: WireBatch, p: float) -> np.ndarray:
-    """Decode every message of a batch; returns ``(P, numel)`` fp32."""
+def decode_ternary_words_batch(batch: WireBatch, p: float, *,
+                               backend: str = "numpy") -> np.ndarray:
+    """Decode every message of a batch; returns ``(P, numel)`` fp32.
+
+    The whole batch decodes as one multi-segment pass (shared unpack,
+    vectorized per-client offset arithmetic) followed by one 2-D scatter.
+    """
     out = np.zeros((batch.n_msgs, batch.numel), np.float32)
-    for i in range(batch.n_msgs):
-        out[i] = decode_ternary_words(batch.message(i), p)
+    seg, positions, signs = decode_ternary_fields_batch(batch, p,
+                                                        backend=backend)
+    if positions.size:
+        mu32 = batch.mu.astype(np.float32)
+        out[seg, positions] = signs * mu32[seg]
     return out
 
 
@@ -559,6 +732,14 @@ def unpack_sign_words(msg: WireMessage) -> np.ndarray:
     bits = words_to_bits(msg.words, msg.bit_len)
     return np.where(bits == 1, np.float32(msg.mu),
                     -np.float32(msg.mu)).astype(np.float32)
+
+
+def sign_plane_bits(msg: WireMessage, *, backend: str = "numpy") -> np.ndarray:
+    """The ``bit_len`` 0/1 sign bits of a dense sign-plane message, through
+    the named unpack backend (validated like the Golomb decode paths)."""
+    words = np.ascontiguousarray(msg.words)
+    _check_bit_len(msg.bit_len, words.size)
+    return _backend_unpack(backend, words)[: int(msg.bit_len)]
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,14 @@ class TrainerConfig:
     # ignore it).
     chunks: int | str | None = None
     p_fn: Optional[Callable] = None
+    # Fused decode→aggregate server ingestion (repro.core.ingest): arriving
+    # messages scatter straight into ONE O(numel) accumulator (wire codecs
+    # through their decoded Golomb/sign-plane fields, others densely) and
+    # the round finalizes from the accumulator -- the server never stacks
+    # the dense (P, numel) message block.  Opt-in: the default dense path
+    # keeps the buffered==synchronous bit-identity regression, while the
+    # ingest path is property-tested against its own dense oracle.
+    ingest: bool = False
 
 
 def _cross_entropy(logits, y):
@@ -131,6 +139,11 @@ class FederatedTrainer:
                      else chunk_spec_from_tree(params, int(tcfg.chunks)))
             protocol = chunk_codec(protocol, cspec, p_fn=tcfg.p_fn)
         self.protocol = protocol
+        self.ingest = bool(tcfg.ingest)
+        if self.ingest and not protocol.supports_ingest:
+            raise ValueError(
+                f"codec {protocol.name!r} has no ingest path "
+                "(supports_ingest=False); drop TrainerConfig(ingest=True)")
 
         self.splits = split_data(train.y, env, seed=tcfg.seed)
         self.rng = np.random.default_rng(tcfg.seed + 1)
@@ -272,6 +285,35 @@ class FederatedTrainer:
                                         jnp.asarray(staleness, jnp.float32))
         return global_delta
 
+    def _participation_weights_np(self, mask, staleness) -> np.ndarray:
+        """The codec's jnp combining weights, resolved host-side (fp32-exact,
+        so the ingest denominator matches the jitted combine's weights)."""
+        return np.asarray(self.protocol.participation_weights(
+            jnp.asarray(mask, jnp.float32),
+            jnp.asarray(staleness, jnp.float32)), np.float64)
+
+    def _ingest_round(self, msgs_np, mask, staleness):
+        """Fused streaming aggregation: the round's messages scatter into an
+        O(numel) accumulator (wire codecs via their decoded fields) instead
+        of aggregating a dense (P, numel) device block.  Returns the applied
+        global delta plus the encoded batch (None for wire-less codecs) so
+        the measured ledger reuses it without re-encoding."""
+        proto = self.protocol
+        w = self._participation_weights_np(mask, staleness)
+        acc = proto.make_ingest(self.numel)
+        batch = None
+        if proto.wire_format:
+            batch = proto.encode_wire_batch(msgs_np, direction="up")
+            proto.ingest_wire_batch(acc, batch, w, direction="up")
+        else:
+            for i in range(msgs_np.shape[0]):
+                proto.ingest_dense(acc, msgs_np[i], float(w[i]))
+        gd, self.server_state, _ = proto.aggregate_ingest(acc,
+                                                          self.server_state)
+        gd = jnp.asarray(gd)
+        self.params_vec = self.params_vec + gd
+        return gd, batch
+
     def run_round(self):
         env, proto = self.env, self.protocol
         p = env.participants_per_round
@@ -279,8 +321,14 @@ class FederatedTrainer:
         xs, ys = self._sample_batches(sel, proto.local_iters)
 
         msgs = self._dispatch(sel, xs, ys)
-        global_delta = self._apply_update(
-            msgs, np.ones(p, np.float32), np.zeros(p, np.float32))
+        batch = None
+        if self.ingest:
+            global_delta, batch = self._ingest_round(
+                np.asarray(msgs), np.ones(p, np.float32),
+                np.zeros(p, np.float32))
+        else:
+            global_delta = self._apply_update(
+                msgs, np.ones(p, np.float32), np.zeros(p, np.float32))
         gd_np = np.asarray(global_delta)
 
         # ---- bit ledger + partial-participation sync cost ------------------
@@ -290,11 +338,14 @@ class FederatedTrainer:
                                                   n_participating=p)
         model_bits = 32.0 * self.numel
         if self.measure_bits:
-            batch = proto.encode_wire_batch(np.asarray(msgs), direction="up")
+            if batch is None:   # the ingest path already encoded the round
+                batch = proto.encode_wire_batch(np.asarray(msgs),
+                                                direction="up")
             up = proto.measured_batch_bits(batch)
             down_msg = proto.encode_wire(gd_np, direction="down")
             per_update = proto.measured_message_bits(down_msg)
-            self._log_wire_round(batch, down_msg, up, per_update)
+            self._log_wire_round(np.asarray(batch.nnz), down_msg, up,
+                                 per_update)
         else:
             up, per_update = up_analytic, per_update_analytic
         self.bits_up += up
@@ -310,16 +361,17 @@ class FederatedTrainer:
         self.cache.push(gd_np)
         self.round += 1
 
-    def _log_wire_round(self, batch, down_msg, up, per_update):
+    def _log_wire_round(self, nnz_up, down_msg, up, per_update):
         """Per-round measured-vs-ceiling row (Eq. 13 / Eq. 15 cross-check).
 
-        nnz comes from the just-encoded streams -- no extra O(P*numel) scan.
+        ``nnz_up`` is the per-message coded-position count of the just-
+        encoded upstream streams -- no extra O(P*numel) scan.
         """
         proto = self.protocol
         up_bound = None
         dn_bound = proto.wire_bound_bits(self.numel, down_msg.nnz, "down")
         bounds = [proto.wire_bound_bits(self.numel, int(z), "up")
-                  for z in batch.nnz]
+                  for z in nnz_up]
         if bounds and all(b is not None for b in bounds):
             up_bound = float(sum(bounds))   # bounds cover header bits too
         self.wire_log.append({
@@ -416,14 +468,42 @@ class BufferedFederatedTrainer(FederatedTrainer):
         xs, ys = self._sample_batches(sel, proto.local_iters)
 
         msgs = self._dispatch(sel, xs, ys)
-        self.sim.dispatch(self.round, sel, list(np.asarray(msgs)))
+        wire_payloads = self.ingest and proto.wire_format
+        if wire_payloads:
+            # streaming ingest mode ships the WIRE messages through the
+            # arrival simulator (what a fleet server actually receives);
+            # each arrival then scatters into the accumulator on landing
+            dispatch_batch = proto.encode_wire_batch(np.asarray(msgs),
+                                                     direction="up")
+            payloads = [dispatch_batch.message(i)
+                        for i in range(dispatch_batch.n_msgs)]
+        else:
+            payloads = list(np.asarray(msgs))
+        self.sim.dispatch(self.round, sel, payloads)
         arrivals = self.sim.collect(self.round)
         kept = [a for a in arrivals
                 if self.round - a.sent_round <= self.max_staleness]
         dropped = len(arrivals) - len(kept)
         self.n_dropped += dropped
 
-        if kept:
+        if kept and self.ingest:
+            mask = np.ones(len(kept), np.float32)
+            staleness = np.asarray([self.round - a.sent_round for a in kept],
+                                   np.float32)
+            w = self._participation_weights_np(mask, staleness)
+            acc = proto.make_ingest(self.numel)
+            for a, wi in zip(kept, w):
+                if wire_payloads:
+                    proto.ingest_wire(acc, a.payload, float(wi),
+                                      direction="up")
+                else:
+                    proto.ingest_dense(acc, np.asarray(a.payload), float(wi))
+            gd, self.server_state, _ = proto.aggregate_ingest(
+                acc, self.server_state)
+            gd = jnp.asarray(gd)
+            self.params_vec = self.params_vec + gd
+            gd_np = np.asarray(gd)
+        elif kept:
             # pad the aggregation buffer to a multiple of the cohort size:
             # stable jit shapes (== p when everyone is on time), zero-weight
             # padding rows are invisible to the masked aggregate
@@ -450,13 +530,22 @@ class BufferedFederatedTrainer(FederatedTrainer):
         per_update_analytic = proto.download_bits(self.numel,
                                                   n_participating=p)
         model_bits = 32.0 * self.numel
-        if self.measure_bits and arrivals:
+        if self.measure_bits and arrivals and wire_payloads:
+            # arrivals already carry their encoded streams: measure as-is
+            up = float(sum(proto.measured_message_bits(a.payload)
+                           for a in arrivals))
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+            self._log_wire_round([a.payload.nnz for a in arrivals],
+                                 down_msg, up, per_update)
+        elif self.measure_bits and arrivals:
             arr = np.stack([np.asarray(a.payload) for a in arrivals])
             batch = proto.encode_wire_batch(arr, direction="up")
             up = proto.measured_batch_bits(batch)
             down_msg = proto.encode_wire(gd_np, direction="down")
             per_update = proto.measured_message_bits(down_msg)
-            self._log_wire_round(batch, down_msg, up, per_update)
+            self._log_wire_round(np.asarray(batch.nnz), down_msg, up,
+                                 per_update)
         elif self.measure_bits:
             up = 0.0        # zero arrivals -> zero upstream bits, no wire row
             down_msg = proto.encode_wire(gd_np, direction="down")

@@ -14,6 +14,10 @@
 * ``bitpack``        -- wire-format word packing: 32 stream bits → one uint32
   word per VPU shift-and-sum, the device half of the ``"kernel"`` wire
   backend in :mod:`repro.core.wire` (single + uniform-length batched).
+* ``wiredecode``     -- the decode inverse: each uint32 stream word explodes
+  into its 32 MSB-first bits plus a fused per-word zero count (the seed of
+  the decoder's run-length prefix scan), the device half of the ``"kernel"``
+  wire DECODE backend.
 * ``ops``            -- jit'd public wrappers; ``ref`` -- pure-jnp oracles.
 
 All entry points take ``interpret: bool | None = None`` and autodetect the
@@ -25,6 +29,8 @@ perf tests.
 
 from repro.core.selection import PASSES, resolve_interpret
 from .bitpack import pack_bits_ref, pack_bits_words, pack_bits_words_batched
+from .wiredecode import (unpack_bits_ref, unpack_bits_words,
+                         unpack_words_with_counts)
 from .hist_select import (hist_topk_threshold, hist_topk_threshold_batched,
                           magnitude_histogram, magnitude_histogram_batched)
 from .ops import (stc_compress_batch, stc_compress_kernel, stc_compress_ref,
@@ -46,6 +52,9 @@ __all__ = [
     "pack_bits_words",
     "pack_bits_words_batched",
     "pack_bits_ref",
+    "unpack_bits_words",
+    "unpack_words_with_counts",
+    "unpack_bits_ref",
     "PASSES",
     "resolve_interpret",
 ]

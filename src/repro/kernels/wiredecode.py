@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: bitstream word unpacking for the wire-decode path.
+
+The streaming Golomb decoder (:mod:`repro.core.wire`) splits, like the
+encoder, into an irregular chain part (terminator successor links, pointer
+doubling, field gathers -- host numpy) and a perfectly regular dense part:
+exploding every uint32 stream word into its 32 MSB-first bits, plus the
+per-word zero count that seeds the decoder's run-length prefix scan.  The
+dense part is this kernel -- the exact inverse of :mod:`bitpack`:
+
+    bit[32w + j] = (word[w] >> (31 - j)) & 1
+    zeros[w]     = 32 - sum_j bit[32w + j]
+
+The layout mirrors the packer: words live in ``(rows, LANE)`` blocks, the
+bit tensor in ``(32, rows, LANE)`` with word ``r * LANE + c`` owning column
+``[:, r, c]``, so each grid step reads a ``(block_rows, LANE)`` uint32 block
+and writes one bit plane per shift -- a pure VPU shift-and-mask with the
+zero-count reduction fused into the same pass (the decoder always needs
+both, so two outputs beat two launches).
+
+``unpack_bits_words`` covers ALL ``32 * n_words`` bits (padding included):
+retraces key off the word count alone, so per-message ``bit_len`` trimming
+stays host-side and free.  ``unpack_bits_ref`` is the pure-jnp oracle; like
+every kernel here, ``interpret=None`` autodetects the backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._util import LANE, PASSES, _cdiv, resolve_interpret
+
+__all__ = ["unpack_bits_words", "unpack_words_with_counts", "unpack_bits_ref"]
+
+# words per VMEM block: 32*block_rows*128 output bits (int32) = 2 MiB at 128
+DEFAULT_BLOCK_ROWS = 32
+INTERPRET_BLOCK_ROWS = 1024
+
+
+def _resolve_rows(block_rows: int | None, interpret: bool) -> int:
+    if block_rows is not None:
+        return block_rows
+    return INTERPRET_BLOCK_ROWS if interpret else DEFAULT_BLOCK_ROWS
+
+
+def unpack_bits_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle: uint32 words -> the full MSB-first 0/1 bit vector."""
+    w = jnp.asarray(words).astype(jnp.uint32)
+    shifts = jnp.uint32(31) - jnp.arange(32, dtype=jnp.uint32)
+    bits = (w[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1).astype(jnp.uint8)
+
+
+def _unpack_kernel(w_ref, bits_ref, zc_ref):
+    w = w_ref[...].astype(jnp.uint32)            # (block_rows, LANE)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (32,) + w.shape, 0)
+    bits = ((w[None, :, :] >> (jnp.uint32(31) - j))
+            & jnp.uint32(1)).astype(jnp.int32)   # (32, block_rows, LANE)
+    bits_ref[...] = bits
+    zc_ref[...] = jnp.int32(32) - jnp.sum(bits, axis=0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def unpack_words_with_counts(
+    words: jnp.ndarray,
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """uint32 stream -> (all ``32 * n_words`` bits, per-word zero counts).
+
+    Stream bit ``t`` comes from word ``t >> 5`` at bit ``31 - (t & 31)``
+    (the canonical order of :mod:`repro.core.wire`); ``zero_counts[w]`` is
+    the number of 0-bits in word ``w``, whose exclusive scan seeds the
+    decoder's terminator chains at word-aligned segment starts.
+    """
+    interpret = resolve_interpret(interpret)
+    block_rows = _resolve_rows(block_rows, interpret)
+    PASSES.record("unpack_bits")
+    n_words = int(words.size)
+    rows = max(_cdiv(n_words, block_rows * LANE), 1) * block_rows
+    padded_words = rows * LANE
+    w2 = jnp.pad(jnp.asarray(words).astype(jnp.uint32).reshape(-1),
+                 (0, padded_words - n_words)).reshape(rows, LANE)
+    bits3, zc2 = pl.pallas_call(
+        _unpack_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((32, block_rows, LANE), lambda i: (0, i, 0)),
+                   pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((32, rows, LANE), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, LANE), jnp.int32)],
+        interpret=interpret,
+    )(w2)
+    # invert the packer's layout: bit j of word w sits at [j, w//LANE, w%LANE]
+    bits = (bits3.reshape(32, padded_words).T.reshape(-1)
+            [: 32 * n_words].astype(jnp.uint8))
+    return bits, zc2.reshape(-1)[:n_words]
+
+
+def unpack_bits_words(
+    words: jnp.ndarray,
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """uint32 word stream -> all ``32 * n_words`` bits (uint8 0/1)."""
+    bits, _ = unpack_words_with_counts(words, block_rows=block_rows,
+                                       interpret=interpret)
+    return bits

@@ -36,8 +36,8 @@ from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import (make_decode_step, make_prefill_step,
                                 serve_state_structs)
-from repro.launch.train import (TrainConfig, batch_shardings,
-                                init_train_state, make_train_step,
+from repro.launch.train import (TrainConfig, WireLedger, batch_shardings,
+                                codec_for, init_train_state, make_train_step,
                                 state_shardings)
 from repro.sharding.rules import batch_spec
 
@@ -74,6 +74,45 @@ def parse_collectives(hlo_text: str) -> dict:
         rec["count"] += 1
         rec["bytes"] += b
     return out
+
+
+def measured_ingest_bytes(tc: TrainConfig, numel: int, n_clients: int,
+                          sample_cap: int = 1 << 22, seed: int = 0) -> dict:
+    """Measured server ingest/broadcast bytes per round via the WireLedger.
+
+    Encodes ONE sampled client update through the codec's actual wire format
+    (the same measurement path the mesh trainer's ledger uses) and scales to
+    the full parameter count and cohort -- measured bits per coded position
+    are position-invariant up to the Golomb gap statistics, so a >= 2^22
+    sample pins the per-round figure without materializing a model-sized
+    round on the dry-run host.  Codecs without a wire format report the
+    ledger's analytic column in both fields.
+    """
+    import numpy as np
+    codec = codec_for(tc)
+    n_s = min(numel, sample_cap)
+    rng = np.random.default_rng(seed)
+    k = max(int(n_s * getattr(codec, "sparsity_up", 1.0)), 1)
+    up = np.zeros(n_s, np.float32)
+    up[rng.choice(n_s, size=k, replace=False)] = \
+        rng.choice((-1.0, 1.0), size=k) * 0.01
+    kd = max(int(n_s * getattr(codec, "sparsity_down", 1.0)), 1)
+    down = np.zeros(n_s, np.float32)
+    down[rng.choice(n_s, size=kd, replace=False)] = \
+        rng.choice((-1.0, 1.0), size=kd) * 0.01
+    ledger = WireLedger(codec, n_s)
+    ledger.record_round({"m": up[None]}, {"g": down})
+    scale = numel / n_s
+    return {
+        "bytes_up_round": ledger.bits_up / 8.0 * scale * n_clients,
+        "bytes_down_round": ledger.bits_down / 8.0 * scale,
+        "analytic_bytes_up_round":
+            ledger.bits_up_analytic / 8.0 * scale * n_clients,
+        "analytic_bytes_down_round":
+            ledger.bits_down_analytic / 8.0 * scale,
+        "sampled_numel": n_s,
+        "n_clients": n_clients,
+    }
 
 
 def _attach(struct_tree, sharding_tree):
@@ -184,6 +223,9 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         "t_lower_s": round(t_lower, 2),
         "t_compile_s": round(t_compile, 2),
     }
+    if shape.kind == "train":
+        rec["server_ingest"] = measured_ingest_bytes(
+            tc, cfg.param_count(), n_clients)
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
               f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
@@ -191,6 +233,11 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
               f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
         if mem_rec:
             print(f"         memory_analysis: { {k: f'{v/2**30:.2f}GiB' for k, v in mem_rec.items()} }")
+        if "server_ingest" in rec:
+            si = rec["server_ingest"]
+            print(f"         server_ingest: up={si['bytes_up_round']/2**20:.2f}"
+                  f"MiB/round down={si['bytes_down_round']/2**20:.2f}MiB/round "
+                  f"(measured, {si['n_clients']} clients)")
     return rec
 
 

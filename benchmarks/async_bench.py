@@ -28,7 +28,8 @@ import numpy as np
 from repro.core import make_protocol, wire
 from repro.data import make_classification
 from repro.fed import (BufferedFederatedTrainer, FedEnvironment,
-                       FederatedTrainer, LatencyModel, TrainerConfig)
+                       FederatedTrainer, LatencyModel, TrainerConfig,
+                       make_scenario)
 from repro.fed.arrivals import ArrivalSimulator
 from repro.models.paper_models import MODEL_ZOO
 
@@ -60,29 +61,55 @@ _FLEET_NUMEL = 1 << 18
 _MAX_STALENESS = 6
 
 
-def fleet(verbose: bool = True, rounds: int = 8):
+def _sparse_payloads(rng, cohort: int, numel: int, p: float):
+    """``cohort`` synthetic sparse ternary uploads, one wire message each
+    (shared by the fleet sweep here and ``benchmarks.events_bench``: the
+    dense ``(cohort, numel)`` tensor is never materialized)."""
+    k = max(int(numel * p), 1)
+    row = np.zeros(numel, np.float32)
+    payloads = []
+    for _ in range(cohort):
+        idx = rng.choice(numel, size=k, replace=False)
+        row[idx] = rng.choice((-1.0, 1.0), size=k) * 0.01
+        payloads.append(wire.encode_ternary_words(row, p))
+        row[idx] = 0.0
+    return payloads
+
+
+def fleet(verbose: bool = True, rounds: int = 8, scenario=None):
+    """Fleet-scale ingest sweep; ``scenario`` (a registered name or a
+    :class:`repro.fed.Scenario`) reshapes WHEN uploads land: the scenario
+    samples time-varying latencies and loss masks, lost uploads never reach
+    the simulator (and bill nothing), and the rows move to the
+    ``async/fleet/stc/c*/<scenario>`` stems so the default family stays
+    comparable across PRs."""
+    scen = (make_scenario(scenario, latency=_LATENCY)
+            if isinstance(scenario, str) else scenario)
     rows = []
     p = 1 / 400
     proto = make_protocol("stc", sparsity_up=p, sparsity_down=p)
-    k = max(int(_FLEET_NUMEL * p), 1)
     for n_clients, eta in _FLEET:
         cohort = max(int(round(n_clients * eta)), 1)
         sim = ArrivalSimulator(_LATENCY, n_clients=n_clients,
                                deadline=1.0, seed=0)
         rng = np.random.default_rng(0)
         state = proto.init_server_state(_FLEET_NUMEL)
-        row = np.zeros(_FLEET_NUMEL, np.float32)
-        ingested = dropped = 0
+        ingested = dropped = lost_total = 0
         t_ingest = 0.0
         for rnd in range(rounds):
             ids = rng.choice(n_clients, size=cohort, replace=False)
-            payloads = []
-            for _ in range(cohort):
-                idx = rng.choice(_FLEET_NUMEL, size=k, replace=False)
-                row[idx] = rng.choice((-1.0, 1.0), size=k) * 0.01
-                payloads.append(wire.encode_ternary_words(row, p))
-                row[idx] = 0.0
-            sim.dispatch(rnd, ids, payloads)
+            payloads = _sparse_payloads(rng, cohort, _FLEET_NUMEL, p)
+            if scen is None:
+                sim.dispatch(rnd, ids, payloads)
+            else:
+                lats, lost = scen.sample(rnd * sim.deadline, ids,
+                                         sim.scales, sim.rng)
+                keep = ~lost
+                lost_total += int(lost.sum())
+                sim.dispatch_with_latencies(
+                    rnd, ids[keep],
+                    [pl for pl, kp in zip(payloads, keep) if kp],
+                    lats[keep])
             arrivals = sim.collect(rnd)
             kept = [a for a in arrivals
                     if rnd - a.sent_round <= _MAX_STALENESS]
@@ -103,16 +130,23 @@ def fleet(verbose: bool = True, rounds: int = 8):
         stem = f"async/fleet/stc/c{n_clients}"
         note = (f"rounds={rounds} cohort={cohort} numel={_FLEET_NUMEL} "
                 f"ingest-only timing")
+        if scen is not None:
+            stem += f"/{scen.name}"
+            note += f" scenario={scen.name}"
         rows.append((f"{stem}/uploads_per_s", ups, note))
         rows.append((f"{stem}/ingested", float(ingested), note))
         rows.append((f"{stem}/dropped", float(dropped), note))
+        if scen is not None:
+            rows.append((f"{stem}/lost", float(lost_total), note))
         if verbose:
             print(f"{stem}: {ups:.1f} uploads/s ingested={ingested} "
-                  f"dropped={dropped}")
+                  f"dropped={dropped}"
+                  + (f" lost={lost_total}" if scen is not None else ""))
     return rows
 
 
-def run(verbose: bool = True, rounds: int = 12, protocols=("stc",)):
+def run(verbose: bool = True, rounds: int = 12, protocols=("stc",),
+        scenarios=()):
     data = make_classification(seed=0, n=6000, n_test=1200)
     train, test = data
     rows = []
@@ -146,8 +180,28 @@ def run(verbose: bool = True, rounds: int = 12, protocols=("stc",)):
                     print(f"{stem}: acc={acc:.3f} "
                           f"upMB={tr.bits_up / 8e6:.3f} dropped={dropped}")
     rows += fleet(verbose=verbose)
+    for scen in scenarios:
+        rows += fleet(verbose=verbose, scenario=scen)
     return rows
 
 
 if __name__ == "__main__":
-    run(verbose=True)
+    import argparse
+
+    from repro.fed import registered_scenarios
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", action="append", default=[],
+                    choices=registered_scenarios(), metavar="NAME",
+                    help="also run the fleet sweep under this registered "
+                         "scenario (repeatable); rows land under "
+                         "async/fleet/stc/c*/<scenario>")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="skip the trainer sweep, run only the fleet rows")
+    ns = ap.parse_args()
+    if ns.fleet_only:
+        fleet(verbose=True)
+        for scen in ns.scenario:
+            fleet(verbose=True, scenario=scen)
+    else:
+        run(verbose=True, scenarios=ns.scenario)

@@ -1,0 +1,105 @@
+"""Event-driven server benchmark across fleet scenarios.
+
+    PYTHONPATH=src python -m benchmarks.events_bench [--smoke]
+
+One K-arrival-triggered :class:`EventDrivenTrainer` training run per
+registered fleet scenario (the same CPU-scale synthetic task as the async
+bench, heterogeneous straggler fleet), reporting per scenario:
+
+  events/<scenario>/acc            -- accuracy after the aggregation budget
+  events/<scenario>/bits_up        -- total MEASURED upstream bits (drops
+                                      bill, losses don't)
+  events/<scenario>/drop_rate      -- (dropped + lost) / served events
+  events/<scenario>/aggs_per_time  -- aggregations per simulated time unit
+
+Written to ``benchmarks/BENCH_events.json`` (unit "mixed" -- report-only in
+the regression gate).  ``aggs_per_time`` is the row that separates the
+scenarios: the count trigger keeps aggregating through a flash crowd (at a
+lower rate) where a fixed deadline would close empty windows, and a
+regional outage shows up as billed-bits loss, not server stalls.
+
+``--smoke`` is the CI lane: a model-free :func:`simulate_scenario` pass
+over every registered scenario plus one tiny training run, seconds not
+minutes.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.data import make_classification
+from repro.fed import (EventDrivenTrainer, FedEnvironment, LatencyModel,
+                       TrainerConfig, make_scenario, registered_scenarios,
+                       simulate_scenario)
+from repro.models.paper_models import MODEL_ZOO
+
+# same heterogeneous straggler fleet as the async bench, so the
+# events/<scenario> rows are comparable with the async/<proto> families
+_LATENCY = LatencyModel(mean=0.6, sigma=0.5, hetero=0.4,
+                        straggler_frac=0.15, straggler_scale=4.0)
+_N_CLIENTS = 100
+_ETA = 1 / 10                       # cohort of 10
+_AGGREGATIONS = 10
+_MAX_STALENESS = 2                  # tight horizon: stragglers really drop
+
+
+def _trainer(train, test, scenario, tcfg=None, **kw):
+    from repro.core import make_protocol
+    env = FedEnvironment(n_clients=_N_CLIENTS, participation=_ETA,
+                         classes_per_client=4, batch_size=10)
+    proto = make_protocol("stc", sparsity_up=1 / 50, sparsity_down=1 / 50)
+    cohort = env.participants_per_round
+    return EventDrivenTrainer(
+        MODEL_ZOO["logreg"], train, test, env, proto,
+        tcfg or TrainerConfig(lr=0.06, seed=0), scenario=scenario,
+        k_arrivals=kw.pop("k_arrivals", cohort),
+        concurrency=kw.pop("concurrency", 2 * cohort),
+        max_staleness=kw.pop("max_staleness", _MAX_STALENESS), **kw)
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    rows = []
+    if smoke:
+        # model-free event-loop pass over EVERY registration (pure numpy)
+        for name in registered_scenarios():
+            st = simulate_scenario(name, n_clients=64, cohort=8,
+                                   concurrency=16, max_staleness=2,
+                                   aggregations=4, seed=0)
+            note = (f"smoke sim aggs={st['aggregations']} "
+                    f"dispatched={st['dispatched']}")
+            rows.append((f"events/sim/{name}/drop_rate", st["drop_rate"],
+                         note))
+            if verbose:
+                print(f"events/sim/{name}: drop_rate={st['drop_rate']:.3f} "
+                      f"aggs/t={st['aggs_per_time']:.2f}")
+        train, test = make_classification(seed=0, n=600, n_test=160)
+        tr = _trainer(train, test, make_scenario("steady", latency=_LATENCY))
+        hist = tr.run(2, eval_every=2)
+        rows.append(("events/smoke/acc", hist[-1]["acc"], "2 aggregations"))
+        if verbose:
+            print(f"events/smoke: acc={hist[-1]['acc']:.3f}")
+        return rows
+
+    train, test = make_classification(seed=0, n=6000, n_test=1200)
+    for name in registered_scenarios():
+        tr = _trainer(train, test, make_scenario(name, latency=_LATENCY))
+        hist = tr.run(_AGGREGATIONS, eval_every=_AGGREGATIONS)
+        acc = hist[-1]["acc"]
+        st = tr.loop.stats()
+        note = (f"aggs={_AGGREGATIONS} clients={_N_CLIENTS} "
+                f"K={tr.k_arrivals} conc={tr.concurrency} "
+                f"max_staleness={tr.max_staleness} measured={tr.measure_bits}")
+        stem = f"events/{name}"
+        rows.append((f"{stem}/acc", acc, note))
+        rows.append((f"{stem}/bits_up", tr.bits_up, note))
+        rows.append((f"{stem}/drop_rate", st["drop_rate"], note))
+        rows.append((f"{stem}/aggs_per_time", st["aggs_per_time"], note))
+        if verbose:
+            print(f"{stem}: acc={acc:.3f} upMB={tr.bits_up / 8e6:.3f} "
+                  f"drop_rate={st['drop_rate']:.3f} "
+                  f"aggs/t={st['aggs_per_time']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(verbose=True, smoke="--smoke" in sys.argv)

@@ -26,6 +26,7 @@ BENCH_WIRE_PATH = os.path.join(_HERE, "BENCH_wire.json")
 BENCH_ASYNC_PATH = os.path.join(_HERE, "BENCH_async.json")
 BENCH_CHUNKED_PATH = os.path.join(_HERE, "BENCH_chunked.json")
 BENCH_INGEST_PATH = os.path.join(_HERE, "BENCH_ingest.json")
+BENCH_EVENTS_PATH = os.path.join(_HERE, "BENCH_events.json")
 
 
 def _write_bench(path: str, rows, unit: str = "us") -> None:
@@ -69,6 +70,10 @@ def write_bench_ingest(rows) -> None:
     _write_bench(BENCH_INGEST_PATH, rows, unit="mixed")
 
 
+def write_bench_events(rows) -> None:
+    _write_bench(BENCH_EVENTS_PATH, rows, unit="mixed")
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
@@ -77,11 +82,11 @@ def main() -> None:
 
     rows = []
     which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                     "async", "fig3", "fig5", "fig2", "table4", "fig8",
-                     "roofline"]
+                     "events", "async", "fig3", "fig5", "fig2", "table4",
+                     "fig8", "roofline"]
     if quick:
         which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                         "fig3"]
+                         "events", "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -105,6 +110,12 @@ def main() -> None:
             if not quick:    # quick = smoke scale; keep the tracked file
                 write_bench_ingest(irows)    # at the fleet operating point
             rows += irows
+        elif name == "events":
+            from benchmarks import events_bench
+            erows = events_bench.run(verbose=False, smoke=quick)
+            if not quick:    # quick = smoke scale; keep the tracked file
+                write_bench_events(erows)    # at the full scenario sweep
+            rows += erows
         elif name == "async":
             from benchmarks import async_bench
             arows = async_bench.run(verbose=False)

@@ -28,7 +28,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json",
                  "benchmarks/BENCH_chunked.json",
-                 "benchmarks/BENCH_ingest.json")
+                 "benchmarks/BENCH_ingest.json",
+                 "benchmarks/BENCH_events.json")
 
 
 def row_value(row: dict):

@@ -43,4 +43,7 @@ python scripts/smoke_protocols.py --chunks 64
 stage ingest-smoke
 python -m benchmarks.ingest_bench --smoke
 
+stage events-smoke
+python -m benchmarks.events_bench --smoke
+
 stage done

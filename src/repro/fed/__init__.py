@@ -1,10 +1,25 @@
 """Federated runtime: environment (Alg. 5 splits), trainers (Alg. 2 loop,
-synchronous + deadline-buffered async), client arrival simulation."""
+synchronous + deadline-buffered async + event-driven), client arrival
+simulation, fleet scenarios, pluggable client samplers."""
 
 from .arrivals import Arrival, ArrivalSimulator, LatencyModel
 from .environment import FedEnvironment, split_data, volume_fractions
-from .loop import BufferedFederatedTrainer, FederatedTrainer, TrainerConfig
+from .events import (EventClock, EventDrivenTrainer, EventLoop, EventRecord,
+                     simulate_scenario)
+from .loop import (BufferedFederatedTrainer, FederatedTrainer, TrainerConfig,
+                   build_apply_phase, build_encode_phase)
+from .sampling import (ClientSampler, SamplerView, make_sampler,
+                       register_sampler, registered_samplers)
+from .scenarios import (Scenario, make_scenario, register_scenario,
+                        registered_scenarios)
 
 __all__ = ["FedEnvironment", "split_data", "volume_fractions",
            "FederatedTrainer", "BufferedFederatedTrainer", "TrainerConfig",
-           "Arrival", "ArrivalSimulator", "LatencyModel"]
+           "build_encode_phase", "build_apply_phase",
+           "Arrival", "ArrivalSimulator", "LatencyModel",
+           "EventClock", "EventLoop", "EventRecord", "EventDrivenTrainer",
+           "simulate_scenario",
+           "Scenario", "make_scenario", "register_scenario",
+           "registered_scenarios",
+           "ClientSampler", "SamplerView", "make_sampler", "register_sampler",
+           "registered_samplers"]

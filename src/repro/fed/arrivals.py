@@ -57,6 +57,24 @@ class LatencyModel:
     straggler_frac: float = 0.0     # fraction of chronically slow clients
     straggler_scale: float = 8.0    # their latency multiplier
 
+    def __post_init__(self):
+        # typed, field-named errors instead of a math-domain error deep in
+        # ``sample`` (log(mean)) or silently nonsensical populations
+        if not self.mean > 0.0:
+            raise ValueError(f"LatencyModel.mean must be > 0, got {self.mean}")
+        if self.sigma < 0.0:
+            raise ValueError(
+                f"LatencyModel.sigma must be >= 0, got {self.sigma}")
+        if self.hetero < 0.0:
+            raise ValueError(
+                f"LatencyModel.hetero must be >= 0, got {self.hetero}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError("LatencyModel.straggler_frac must be in [0, 1], "
+                             f"got {self.straggler_frac}")
+        if not self.straggler_scale > 0.0:
+            raise ValueError("LatencyModel.straggler_scale must be > 0, "
+                             f"got {self.straggler_scale}")
+
     def client_scales(self, n_clients: int, seed: int = 0) -> np.ndarray:
         """Deterministic persistent per-client latency multipliers."""
         rng = np.random.default_rng(seed)
@@ -97,11 +115,21 @@ class ArrivalSimulator:
         self._pending: Dict[int, List[Arrival]] = {}
 
     def rounds_late(self, latencies: np.ndarray) -> np.ndarray:
-        """How many deadlines elapse before each update lands (its staleness)."""
+        """How many deadlines elapse before each update lands (its staleness).
+
+        ``floor(L / deadline)`` with the quotient snapped to the nearest
+        integer when it is within one part in 10^9: a latency that is an
+        EXACT multiple of the deadline always buckets as ``L/deadline``
+        rounds late, whatever rounding the platform's division produced
+        (e.g. ``0.3 / 0.1 == 2.999...96`` must not bucket one round early).
+        """
         lat = np.asarray(latencies, dtype=np.float64)
         if math.isinf(self.deadline):
             return np.zeros(lat.shape, dtype=np.int64)
-        return np.floor(lat / self.deadline).astype(np.int64)
+        q = lat / self.deadline
+        nearest = np.rint(q)
+        q = np.where(np.isclose(q, nearest, rtol=1e-9, atol=1e-12), nearest, q)
+        return np.floor(q).astype(np.int64)
 
     def dispatch(self, rnd: int, client_ids, payloads) -> np.ndarray:
         """File one cohort's payloads; returns the sampled latencies."""
@@ -109,11 +137,27 @@ class ArrivalSimulator:
         if len(payloads) != ids.size:
             raise ValueError(f"{ids.size} clients but {len(payloads)} payloads")
         lats = self.latency.sample(ids, self.scales, self.rng)
+        self.dispatch_with_latencies(rnd, ids, payloads, lats)
+        return lats
+
+    def dispatch_with_latencies(self, rnd: int, client_ids, payloads,
+                                latencies) -> None:
+        """File one cohort's payloads under externally sampled latencies.
+
+        This is the hook the scenario library drives: a
+        :class:`repro.fed.scenarios.Scenario` samples time-varying latencies
+        (and loss masks) itself and files only the surviving payloads here,
+        reusing the simulator's deadline bucketing and buffer.
+        """
+        ids = np.asarray(client_ids, dtype=np.int64)
+        lats = np.asarray(latencies, dtype=np.float64)
+        if not (len(payloads) == ids.size == lats.size):
+            raise ValueError(f"{ids.size} clients but {len(payloads)} "
+                             f"payloads / {lats.size} latencies")
         late = self.rounds_late(lats)
         for cid, extra, payload in zip(ids, late, payloads):
             self._pending.setdefault(rnd + int(extra), []).append(
                 Arrival(int(cid), rnd, payload))
-        return lats
 
     def collect(self, rnd: int) -> List[Arrival]:
         """Drain every update that arrived by round ``rnd``'s deadline."""

@@ -1,0 +1,535 @@
+"""Event-driven federated serving: aggregate on K arrivals, not on a clock.
+
+The deadline-buffered trainer (:mod:`repro.fed.loop`) still thinks in
+rounds: the server closes a window every ``deadline`` time units whatever
+has landed.  A fleet server does the opposite -- it reacts to events.  This
+module replaces the round clock with a deterministic, seeded event queue of
+in-flight updates (dispatch / arrival / drop / lost events) and a
+FedBuff-style count trigger: the server aggregates the moment its buffer
+holds ``k_arrivals`` updates, bumps the model version, and re-dispatches
+clients (chosen by a pluggable :mod:`repro.fed.sampling` sampler) as
+in-flight slots free up.  Which fleet the events come from is a registered
+:mod:`repro.fed.scenarios` scenario -- diurnal load, flash crowds, regional
+outages, straggler drift, adaptive client deadlines.
+
+Three layers:
+
+* :class:`EventClock` -- a priority queue of timestamped entries with a
+  strict (time, push-sequence) order, so equal-time events pop in push
+  order on every platform: the determinism invariant everything else
+  leans on.
+* :class:`EventLoop` -- the payload-agnostic server mechanics: in-flight
+  tracking, staleness (model versions behind, FedBuff's measure) drops at
+  the buffer horizon, scenario-driven latency/loss sampling, per-event
+  counters.  :func:`simulate_scenario` drives it model-free (pure numpy --
+  no jax) for scenario smoke stats; the trainer drives it with real
+  encoded payloads.
+* :class:`EventDrivenTrainer` -- :class:`FederatedTrainer` host machinery
+  over the event loop, reusing the SAME two jitted phases (encode at
+  dispatch, masked aggregate at trigger) and the fused ingest path
+  (``TrainerConfig(ingest=True)``).  With ``k_arrivals`` = cohort size and
+  the default concurrency, the buffer fills with exactly one cohort per
+  aggregation (oldest dispatch first) and the trainer reproduces the
+  synchronous :class:`FederatedTrainer` bit for bit -- params, measured +
+  analytic ledgers and ``wire_log`` (regression-tested in
+  tests/test_events.py).
+
+Bits are billed per event, when the bytes reach the server: arrivals and
+staleness-drops count (the transmission happened), network-lost and
+client-aborted updates bill zero.  ``event_log`` carries one row per
+arrival/drop/lost event; measured wire totals flush into the ledger at each
+aggregation exactly as the synchronous trainer accounts them.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from typing import List, NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.environment import FedEnvironment
+from repro.fed.loop import FederatedTrainer, TrainerConfig
+from repro.fed.sampling import ClientSampler, SamplerView, make_sampler
+from repro.fed.scenarios import Scenario, make_scenario
+
+__all__ = ["EventClock", "EventLoop", "EventRecord", "EventDrivenTrainer",
+           "simulate_scenario"]
+
+# Safety valve: a scenario that starves the buffer (e.g. everything lost)
+# must fail loudly, not dispatch forever.
+_MAX_COHORTS_PER_AGG = 256
+
+
+class EventClock:
+    """Deterministic priority queue of timestamped entries.
+
+    Entries pop in ``(time, push-sequence)`` order: pushes at the SAME
+    simulation time drain in push order, and payloads are never compared --
+    the heap-tie-breaking invariant that makes every event trace
+    reproducible from the seed alone.
+    """
+
+    def __init__(self) -> None:
+        self._heap: list = []
+        self._seq = 0
+        self.now = 0.0          # time of the latest popped entry
+
+    def push(self, t: float, item) -> None:
+        if not (math.isfinite(t) and t >= 0.0):
+            raise ValueError(f"event time must be finite and >= 0, got {t}")
+        heapq.heappush(self._heap, (float(t), self._seq, item))
+        self._seq += 1
+
+    def peek_time(self) -> float:
+        if not self._heap:
+            raise IndexError("peek_time on an empty EventClock")
+        return self._heap[0][0]
+
+    def pop(self):
+        """(time, seq, item) of the next due entry; advances ``now``."""
+        if not self._heap:
+            raise IndexError("pop on an empty EventClock")
+        t, seq, item = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, seq, item
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class _InFlight(NamedTuple):
+    """One dispatched update travelling toward the server."""
+
+    client: int
+    dseq: int           # global dispatch sequence (dispatch order)
+    sent_at: float
+    sent_version: int   # server model version the client encoded against
+    payload: object
+    lost: bool          # network loss / client-side abort: never arrives
+
+
+class EventRecord(NamedTuple):
+    """One served event: ``kind`` is "arrival", "drop" or "lost"."""
+
+    kind: str
+    t: float
+    client: int
+    staleness: int      # model versions behind at arrival (FedBuff measure)
+    dseq: int
+    sent_at: float
+    sent_version: int
+    payload: object
+
+
+class EventLoop:
+    """Payload-agnostic event-driven server mechanics.
+
+    The driver alternates two calls until :meth:`ready`:
+    :meth:`dispatch` whenever :attr:`wants_dispatch` (the in-flight pool has
+    room for a full cohort), else :meth:`step` (serve the next due event).
+    ``take_round()`` then consumes the buffer -- oldest dispatch first --
+    and bumps the server version.  Staleness of an update is
+    ``version_now - version_at_dispatch``; anything staler than
+    ``max_staleness`` is dropped at arrival.  Updates flagged lost by the
+    scenario occupy their in-flight slot until their would-be arrival time,
+    then vanish (the server only learns by timeout).
+    """
+
+    def __init__(self, scenario: Scenario, n_clients: int, *, cohort: int,
+                 k_arrivals: int, concurrency: int, max_staleness: int,
+                 seed: int = 0) -> None:
+        if k_arrivals < 1:
+            raise ValueError(f"k_arrivals must be >= 1, got {k_arrivals}")
+        if not 1 <= cohort <= n_clients:
+            raise ValueError(f"cohort must be in [1, {n_clients}], "
+                             f"got {cohort}")
+        if concurrency < cohort:
+            raise ValueError("concurrency must admit at least one cohort "
+                             f"({cohort}), got {concurrency}")
+        if max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {max_staleness}")
+        self.scenario = scenario
+        self.n_clients = int(n_clients)
+        self.cohort = int(cohort)
+        self.k_arrivals = int(k_arrivals)
+        self.concurrency = int(concurrency)
+        self.max_staleness = int(max_staleness)
+        self.clock = EventClock()
+        self.rng = np.random.default_rng(seed)          # latency/loss draws
+        self.scales = scenario.latency.client_scales(n_clients, seed=seed + 1)
+        self.version = 0                                # aggregations so far
+        self.buffer: List[EventRecord] = []
+        self._inflight_n = np.zeros(n_clients, np.int32)
+        self.n_inflight = 0
+        self._dseq = 0
+        self.n_dispatched = 0
+        self.n_arrived = 0
+        self.n_dropped = 0
+        self.n_lost = 0
+        self.staleness_sum = 0
+
+    # ------------------------------------------------------------- driving
+    @property
+    def inflight(self) -> np.ndarray:
+        """(n_clients,) bool: at least one update of theirs is in the air."""
+        return self._inflight_n > 0
+
+    @property
+    def wants_dispatch(self) -> bool:
+        """True when the buffer still needs arrivals and the in-flight pool
+        has room for one more full cohort."""
+        return (len(self.buffer) < self.k_arrivals
+                and self.n_inflight + self.cohort <= self.concurrency)
+
+    def ready(self) -> bool:
+        return len(self.buffer) >= self.k_arrivals
+
+    def dispatch(self, client_ids, payloads=None):
+        """File one cohort at the current simulation time.
+
+        Latencies and loss flags come from the scenario; returns
+        ``(latencies, lost)`` so the driver can log them.  ``payloads=None``
+        dispatches opaque placeholders (the model-free simulator).
+        """
+        ids = np.asarray(client_ids, np.int64)
+        if payloads is None:
+            payloads = [None] * ids.size
+        if len(payloads) != ids.size:
+            raise ValueError(f"{ids.size} clients but {len(payloads)} "
+                             "payloads")
+        t = self.clock.now
+        lats, lost = self.scenario.sample(t, ids, self.scales, self.rng)
+        for cid, lat, lo, payload in zip(ids, lats, lost, payloads):
+            self.clock.push(t + float(lat), _InFlight(
+                int(cid), self._dseq, t, self.version, payload, bool(lo)))
+            self._dseq += 1
+            self._inflight_n[cid] += 1
+        self.n_inflight += ids.size
+        self.n_dispatched += ids.size
+        return lats, lost
+
+    def step(self) -> EventRecord:
+        """Serve the next due event; buffers arrivals, records drops/losses."""
+        t, _, f = self.clock.pop()
+        self.n_inflight -= 1
+        self._inflight_n[f.client] -= 1
+        stal = self.version - f.sent_version
+        if f.lost:
+            self.n_lost += 1
+            return EventRecord("lost", t, f.client, stal, f.dseq, f.sent_at,
+                               f.sent_version, None)
+        if stal > self.max_staleness:
+            self.n_dropped += 1
+            return EventRecord("drop", t, f.client, stal, f.dseq, f.sent_at,
+                               f.sent_version, f.payload)
+        rec = EventRecord("arrival", t, f.client, stal, f.dseq, f.sent_at,
+                          f.sent_version, f.payload)
+        self.buffer.append(rec)
+        self.n_arrived += 1
+        self.staleness_sum += stal
+        return rec
+
+    def take_round(self) -> List[EventRecord]:
+        """Consume the buffer for one aggregation and bump the version.
+
+        Returned oldest dispatch first (global dispatch order), the same
+        convention as ``ArrivalSimulator.collect`` -- with K = cohort this
+        makes the aggregation batch EXACTLY the dispatch batch, whatever
+        order the arrivals raced in.
+        """
+        if not self.buffer:
+            raise RuntimeError("take_round with an empty buffer: the server "
+                               "only aggregates on arrivals")
+        kept = sorted(self.buffer, key=lambda r: r.dseq)
+        self.buffer = []
+        self.version += 1
+        return kept
+
+    def stats(self) -> dict:
+        """Counters + rates for scenario smoke stats and dry-run records."""
+        now = self.clock.now
+        served = self.n_arrived + self.n_dropped + self.n_lost
+        return {
+            "aggregations": self.version,
+            "dispatched": self.n_dispatched,
+            "arrived": self.n_arrived,
+            "dropped": self.n_dropped,
+            "lost": self.n_lost,
+            "pending": self.n_inflight,
+            "sim_time": now,
+            "aggs_per_time": self.version / now if now > 0 else 0.0,
+            "drop_rate": (self.n_dropped + self.n_lost) / max(served, 1),
+            "mean_staleness": self.staleness_sum / max(self.n_arrived, 1),
+        }
+
+
+def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
+                      cohort: int = 16, k_arrivals: Optional[int] = None,
+                      concurrency: Optional[int] = None,
+                      max_staleness: int = 4, aggregations: int = 8,
+                      sampler: Union[str, ClientSampler] = "uniform",
+                      seed: int = 0) -> dict:
+    """Model-free event-loop run of one scenario: pure numpy, no payloads.
+
+    Drives :class:`EventLoop` through ``aggregations`` K-arrival triggers
+    with placeholder payloads and returns :meth:`EventLoop.stats` -- the
+    per-scenario event statistics the dry-run records and the scenario
+    smoke tests read.  Deterministic in ``seed``.
+    """
+    scen = make_scenario(scenario) if isinstance(scenario, str) else scenario
+    smp = make_sampler(sampler) if isinstance(sampler, str) else sampler
+    k = int(k_arrivals) if k_arrivals else cohort
+    conc = int(concurrency) if concurrency else max(k, cohort)
+    loop = EventLoop(scen, n_clients, cohort=cohort, k_arrivals=k,
+                     concurrency=conc, max_staleness=max_staleness, seed=seed)
+    rng = np.random.default_rng(seed + 7)               # sampler draws
+    last_seen = np.zeros(n_clients, np.int64)
+    for _ in range(aggregations):
+        cohorts = 0
+        while not loop.ready():
+            if loop.wants_dispatch:
+                if cohorts >= _MAX_COHORTS_PER_AGG:
+                    raise RuntimeError(
+                        f"scenario {scen.name!r} starved the buffer: "
+                        f"{cohorts} cohorts dispatched without reaching "
+                        f"k_arrivals={k}")
+                view = SamplerView(loop.version, last_seen, loop.inflight)
+                loop.dispatch(smp.select(rng, view, cohort))
+                cohorts += 1
+            else:
+                loop.step()
+        for rec in loop.take_round():
+            last_seen[rec.client] = loop.version
+    return {"scenario": scen.name, **loop.stats()}
+
+
+class EventDrivenTrainer(FederatedTrainer):
+    """K-arrival-triggered (FedBuff-style) federated training.
+
+    One ``run_round()`` = one aggregation: the event loop dispatches
+    sampler-chosen cohorts whenever the in-flight pool has room, serves
+    arrival/drop/lost events in time order, and the moment ``k_arrivals``
+    updates sit in the buffer the codec's masked ``aggregate`` (or the
+    fused ingest path) fires with each update weighted by its FedBuff
+    staleness -- model versions behind, not rounds.  The two jitted phases
+    are the synchronous trainer's own; clients encode against the model at
+    dispatch time, exactly as the buffered trainer commits error feedback.
+
+    With ``k_arrivals`` = cohort size (the default) and the default
+    concurrency of one cohort, every aggregation consumes exactly one
+    dispatch cohort in dispatch order and the trainer is bit-identical to
+    :class:`FederatedTrainer` under ANY scenario that loses and drops
+    nothing -- params, measured/analytic ledgers, ``wire_log``.
+
+    Ledger semantics (the honest-accounting rules of the buffered trainer,
+    per event): upstream bits bill at arrival AND at staleness-drop (the
+    bytes reached the server) but never for lost/aborted updates;
+    downstream ``UpdateCache`` sync cost bills per dispatched cohort at the
+    next aggregation's measured per-update size.  ``event_log`` has one row
+    per event; ``agg_log`` one per aggregation (arrived / dropped / lost /
+    buffer staleness / simulation time).
+    """
+
+    def __init__(self, model, train, test, env: FedEnvironment, protocol,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 scenario: Union[str, Scenario] = "steady",
+                 sampler: Union[str, ClientSampler] = "uniform",
+                 k_arrivals: Optional[int] = None,
+                 concurrency: Optional[int] = None, max_staleness: int = 8):
+        super().__init__(model, train, test, env, protocol, tcfg)
+        if not self._accepts_mask:
+            raise TypeError(
+                f"codec {self.protocol.name!r} overrides aggregate() without "
+                "the mask/staleness parameters; event-driven aggregation "
+                "needs the masked Codec API (see core.protocols.Codec)")
+        self.scenario = (make_scenario(scenario)
+                         if isinstance(scenario, str) else scenario)
+        self.sampler = (make_sampler(sampler)
+                        if isinstance(sampler, str) else sampler)
+        p = env.participants_per_round
+        self.k_arrivals = int(k_arrivals) if k_arrivals else p
+        self.concurrency = (int(concurrency) if concurrency
+                            else max(self.k_arrivals, p))
+        self.max_staleness = int(max_staleness)
+        self.loop = EventLoop(self.scenario, env.n_clients, cohort=p,
+                              k_arrivals=self.k_arrivals,
+                              concurrency=self.concurrency,
+                              max_staleness=self.max_staleness,
+                              seed=tcfg.seed + 2)
+        self._wire_payloads = self.ingest and self.protocol.wire_format
+        self.n_dropped = 0
+        self.n_lost = 0
+        self.event_log: list[dict] = []
+        self.agg_log: list[dict] = []
+        self._billed: list[EventRecord] = []    # reached server, unledgered
+        self._pending_down: list[np.ndarray] = []   # cohorts since last agg
+
+    # ----------------------------------------------------------- event side
+    def _dispatch_cohort(self) -> None:
+        """Sampler-chosen cohort: local SGD + encode against the CURRENT
+        model (one jitted phase), then into the event queue."""
+        proto = self.protocol
+        p = self.env.participants_per_round
+        view = SamplerView(self.round, self.last_seen, self.loop.inflight)
+        sel = np.asarray(self.sampler.select(self.rng, view, p), np.int64)
+        xs, ys = self._sample_batches(sel, proto.local_iters)
+        msgs = self._dispatch(sel, xs, ys)
+        if self._wire_payloads:
+            batch = proto.encode_wire_batch(np.asarray(msgs), direction="up")
+            payloads = [batch.message(i) for i in range(batch.n_msgs)]
+        else:
+            payloads = list(np.asarray(msgs))
+        _, lost = self.loop.dispatch(sel, payloads)
+        self._pending_down.append(sel)
+        self.event_log.append({
+            "kind": "dispatch", "t": self.loop.clock.now, "version": self.round,
+            "clients": int(sel.size), "lost_in_flight": int(lost.sum())})
+
+    def _record_event(self, ev: EventRecord) -> None:
+        proto = self.protocol
+        row = {"kind": ev.kind, "t": ev.t, "client": ev.client,
+               "staleness": ev.staleness, "version": self.round}
+        if ev.kind == "lost":
+            self.n_lost += 1
+            row["bits_up"] = 0.0                # bytes never reached the server
+        else:
+            self._billed.append(ev)
+            if ev.kind == "drop":
+                self.n_dropped += 1
+            # exact per-event bits when the payload IS the wire stream;
+            # dense-mode rounds measure the batch at the aggregation flush
+            # (identical totals) and bill the analytic size per event here
+            row["bits_up"] = (proto.measured_message_bits(ev.payload)
+                              if self._wire_payloads and self.measure_bits
+                              else proto.upload_bits(self.numel))
+        self.event_log.append(row)
+
+    # ------------------------------------------------------------ round API
+    def run_round(self):
+        """Advance the event loop to the next K-arrival aggregation."""
+        loop = self.loop
+        cohorts = 0
+        while not loop.ready():
+            if loop.wants_dispatch:
+                if cohorts >= _MAX_COHORTS_PER_AGG:
+                    raise RuntimeError(
+                        f"scenario {self.scenario.name!r} starved the "
+                        f"buffer: {cohorts} cohorts dispatched without "
+                        f"reaching k_arrivals={self.k_arrivals}")
+                self._dispatch_cohort()
+                cohorts += 1
+            else:
+                self._record_event(loop.step())
+        self._aggregate_round()
+
+    def advance_to(self, t: float) -> int:
+        """Serve every event due by simulation time ``t`` WITHOUT
+        dispatching; aggregations still trigger whenever the buffer fills.
+        Zero due events -- quiescence -- leaves params, codec state and
+        every ledger untouched.  Returns the number of events served."""
+        served = 0
+        while len(self.loop.clock) and self.loop.clock.peek_time() <= t:
+            self._record_event(self.loop.step())
+            served += 1
+            if self.loop.ready():
+                self._aggregate_round()
+        return served
+
+    # ---------------------------------------------------------- aggregation
+    def _aggregate_round(self) -> None:
+        proto = self.protocol
+        p = self.env.participants_per_round
+        kept = self.loop.take_round()       # oldest dispatch first
+        mask_k = np.ones(len(kept), np.float32)
+        stal_k = np.asarray([r.staleness for r in kept], np.float32)
+        if self.ingest:
+            w = self._participation_weights_np(mask_k, stal_k)
+            acc = proto.make_ingest(self.numel)
+            for r, wi in zip(kept, w):
+                if self._wire_payloads:
+                    proto.ingest_wire(acc, r.payload, float(wi),
+                                      direction="up")
+                else:
+                    proto.ingest_dense(acc, np.asarray(r.payload), float(wi))
+            gd, self.server_state, _ = proto.aggregate_ingest(
+                acc, self.server_state)
+            gd = jnp.asarray(gd)
+            self.params_vec = self.params_vec + gd
+            gd_np = np.asarray(gd)
+        else:
+            # pad to a multiple of the cohort: stable jit shapes (== p in
+            # the K = cohort configuration), zero-weight padding rows are
+            # invisible to the masked aggregate
+            kpad = p * math.ceil(len(kept) / p)
+            buf = np.zeros((kpad, self.numel), np.float32)
+            mask = np.zeros(kpad, np.float32)
+            staleness = np.zeros(kpad, np.float32)
+            for i, r in enumerate(kept):
+                buf[i] = np.asarray(r.payload)
+                mask[i] = 1.0
+                staleness[i] = r.staleness
+            gd_np = np.asarray(self._apply_update(jnp.asarray(buf), mask,
+                                                  staleness))
+
+        # ---- bit ledger: flush everything that reached the server --------
+        billed, self._billed = self._billed, []
+        up_analytic = len(billed) * proto.upload_bits(self.numel)
+        per_update_analytic = proto.download_bits(self.numel,
+                                                  n_participating=p)
+        model_bits = 32.0 * self.numel
+        if self.measure_bits and billed and self._wire_payloads:
+            up = float(sum(proto.measured_message_bits(r.payload)
+                           for r in billed))
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+            self._log_wire_round([r.payload.nnz for r in billed], down_msg,
+                                 up, per_update)
+        elif self.measure_bits and billed:
+            arr = np.stack([np.asarray(r.payload) for r in billed])
+            batch = proto.encode_wire_batch(arr, direction="up")
+            up = proto.measured_batch_bits(batch)
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+            self._log_wire_round(np.asarray(batch.nnz), down_msg, up,
+                                 per_update)
+        elif self.measure_bits:
+            up = 0.0
+            down_msg = proto.encode_wire(gd_np, direction="down")
+            per_update = proto.measured_message_bits(down_msg)
+        else:
+            up, per_update = up_analytic, per_update_analytic
+        self.bits_up += up
+        self.bits_up_analytic += up_analytic
+        # downstream sync cost per dispatched cohort, in dispatch order --
+        # cohorts may repeat a client, so last_seen commits between cohorts
+        for sel in self._pending_down:
+            skipped = self.round - self.last_seen[sel]
+            self.bits_down += self.cache.sync_bits_batch(
+                skipped, per_update, model_bits)
+            self.bits_down_analytic += self.cache.sync_bits_batch(
+                skipped, per_update_analytic, model_bits)
+            self.last_seen[sel] = self.round
+        self._pending_down = []
+        self.cache.push(gd_np)
+        stats = self.loop.stats()
+        self.agg_log.append({
+            "agg": self.loop.version, "t": self.loop.clock.now,
+            "aggregated": len(kept), "billed": len(billed),
+            "staleness_max": int(stal_k.max(initial=0.0)),
+            "dropped_total": self.n_dropped, "lost_total": self.n_lost,
+            "pending": stats["pending"],
+        })
+        self.round += 1
+
+    def _history_extra(self) -> dict:
+        now = self.loop.clock.now
+        last = self.agg_log[-1] if self.agg_log else {}
+        return {"n_dropped": self.n_dropped, "n_lost": self.n_lost,
+                "sim_time": now,
+                "aggs_per_time": self.round / now if now > 0 else 0.0,
+                "pending": self.loop.n_inflight,
+                "aggregated": last.get("aggregated", 0)}

@@ -64,7 +64,8 @@ from repro.data.synthetic import Dataset
 from repro.fed.arrivals import ArrivalSimulator, LatencyModel
 from repro.fed.environment import FedEnvironment, split_data
 
-__all__ = ["FederatedTrainer", "BufferedFederatedTrainer", "TrainerConfig"]
+__all__ = ["FederatedTrainer", "BufferedFederatedTrainer", "TrainerConfig",
+           "build_encode_phase", "build_apply_phase"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +115,83 @@ def _codec_accepts_mask(codec: Codec) -> bool:
     if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
         return True
     return "mask" in params and "staleness" in params
+
+
+# ---------------------------------------------------------------------------
+# The two shared jitted phases.  Every trainer in this repo -- synchronous,
+# deadline-buffered, event-driven (repro.fed.events) -- is host machinery
+# around these SAME two compiled computations, which is what makes the
+# bit-identity regressions (buffered@deadline=inf == sync, event@K=cohort ==
+# sync) statements about scheduling alone, not numerics.
+# ---------------------------------------------------------------------------
+
+
+def build_encode_phase(codec: Codec, apply_fn: Callable, spec,
+                       lr: float, momentum: float):
+    """Client phase: local SGD on the dispatched cohort + upstream
+    compression, one vmapped jit.
+
+    Returns a jitted ``(params_vec, mom_sel, cstate_sel, xs, ys) ->
+    (msgs, new_mom, new_cstate)`` with ``xs: (P, iters, b, ...)``.
+    """
+    # momentum stays an fp32 pytree inside the scan (no per-step
+    # flatten/unflatten round-trip); it is flattened once per round to
+    # slot back into the stacked (n_clients, numel) state.
+    treedef, shapes = spec
+    spec_f32 = (treedef, [(shape, jnp.float32) for shape, _ in shapes])
+
+    def local_update(params_vec, mom_vec, xs, ys):
+        """One client: ``local_iters`` SGD steps. xs: (n, b, ...)."""
+        params = unflatten_pytree(params_vec, spec)
+        mom_tree = unflatten_pytree(mom_vec, spec_f32)
+
+        def loss(p, x, y):
+            return _cross_entropy(apply_fn(p, x), y)
+
+        def step(carry, batch):
+            p, v = carry
+            x, y = batch
+            g = jax.grad(loss)(p, x, y)
+            v = jax.tree.map(
+                lambda vi, gi: momentum * vi + gi.astype(jnp.float32), v, g)
+            # update math in fp32, round once per step at the cast back
+            p = jax.tree.map(
+                lambda pi, vi: (pi.astype(jnp.float32) - lr * vi)
+                .astype(pi.dtype), p, v)
+            return (p, v), None
+
+        (p_final, v_final), _ = jax.lax.scan(step, (params, mom_tree),
+                                             (xs, ys))
+        delta = flatten_pytree(p_final)[0] - params_vec
+        return delta, flatten_pytree(v_final)[0]
+
+    def encode_fn(params_vec, mom_sel, cstate_sel, xs, ys):
+        deltas, new_mom = jax.vmap(
+            lambda m, x, y: local_update(params_vec, m, x, y)
+        )(mom_sel, xs, ys)
+        msgs, new_cstate, _ = codec.encode_batch(deltas, cstate_sel)
+        return msgs, new_mom, new_cstate
+
+    return jax.jit(encode_fn)
+
+
+def build_apply_phase(codec: Codec, accepts_mask: bool):
+    """Server phase: masked staleness-weighted aggregation + downstream
+    compression + the global parameter update, one jit.
+
+    Returns a jitted ``(params_vec, server_state, msgs, mask, staleness) ->
+    (new_params_vec, new_server_state, global_delta)``.
+    """
+    def apply_fn(params_vec, server_state, msgs, mask, staleness):
+        if accepts_mask:
+            global_delta, server_state, _ = codec.aggregate(
+                msgs, server_state, mask=mask, staleness=staleness)
+        else:   # legacy codec (pre-mask API): synchronous mean only
+            global_delta, server_state, _ = codec.aggregate(
+                msgs, server_state)
+        return params_vec + global_delta, server_state, global_delta
+
+    return jax.jit(apply_fn)
 
 
 class FederatedTrainer:
@@ -182,70 +260,11 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------ jit
     def _build_encode_fn(self):
-        """Client phase: local SGD on the dispatched cohort + upstream
-        compression, one vmapped jit.  Returns (msgs, new_mom, new_cstate)."""
-        codec = self.protocol
-        lr = self.tcfg.lr
-        mom = self.tcfg.momentum
-        spec = self.spec
-        # momentum stays an fp32 pytree inside the scan (no per-step
-        # flatten/unflatten round-trip); it is flattened once per round to
-        # slot back into the stacked (n_clients, numel) state.
-        treedef, shapes = spec
-        spec_f32 = (treedef, [(shape, jnp.float32) for shape, _ in shapes])
-        apply_fn = self.apply_fn
-
-        def local_update(params_vec, mom_vec, xs, ys):
-            """One client: ``local_iters`` SGD steps. xs: (n, b, ...)."""
-            params = unflatten_pytree(params_vec, spec)
-            mom_tree = unflatten_pytree(mom_vec, spec_f32)
-
-            def loss(p, x, y):
-                return _cross_entropy(apply_fn(p, x), y)
-
-            def step(carry, batch):
-                p, v = carry
-                x, y = batch
-                g = jax.grad(loss)(p, x, y)
-                v = jax.tree.map(
-                    lambda vi, gi: mom * vi + gi.astype(jnp.float32), v, g)
-                # update math in fp32, round once per step at the cast back
-                p = jax.tree.map(
-                    lambda pi, vi: (pi.astype(jnp.float32) - lr * vi)
-                    .astype(pi.dtype), p, v)
-                return (p, v), None
-
-            (p_final, v_final), _ = jax.lax.scan(step, (params, mom_tree),
-                                                 (xs, ys))
-            delta = flatten_pytree(p_final)[0] - params_vec
-            return delta, flatten_pytree(v_final)[0]
-
-        def encode_fn(params_vec, mom_sel, cstate_sel, xs, ys):
-            """xs: (P, iters, b, ...); ys: (P, iters, b)."""
-            deltas, new_mom = jax.vmap(
-                lambda m, x, y: local_update(params_vec, m, x, y)
-            )(mom_sel, xs, ys)
-            msgs, new_cstate, _ = codec.encode_batch(deltas, cstate_sel)
-            return msgs, new_mom, new_cstate
-
-        return jax.jit(encode_fn)
+        return build_encode_phase(self.protocol, self.apply_fn, self.spec,
+                                  self.tcfg.lr, self.tcfg.momentum)
 
     def _build_apply_fn(self):
-        """Server phase: masked staleness-weighted aggregation + downstream
-        compression + the global parameter update, one jit."""
-        codec = self.protocol
-        accepts_mask = self._accepts_mask
-
-        def apply_fn(params_vec, server_state, msgs, mask, staleness):
-            if accepts_mask:
-                global_delta, server_state, _ = codec.aggregate(
-                    msgs, server_state, mask=mask, staleness=staleness)
-            else:   # legacy codec (pre-mask API): synchronous mean only
-                global_delta, server_state, _ = codec.aggregate(
-                    msgs, server_state)
-            return params_vec + global_delta, server_state, global_delta
-
-        return jax.jit(apply_fn)
+        return build_apply_phase(self.protocol, self._accepts_mask)
 
     def _eval_batch(self, params_vec, x, y):
         params = unflatten_pytree(params_vec, self.spec)

@@ -115,6 +115,28 @@ def measured_ingest_bytes(tc: TrainConfig, numel: int, n_clients: int,
     }
 
 
+def fleet_event_stats(n_clients: int, seed: int = 0) -> dict:
+    """Per-scenario event statistics for the dry-run record.
+
+    One model-free :func:`repro.fed.events.simulate_scenario` pass (pure
+    numpy -- no lowering, no arrays) per registered fleet scenario, sized to
+    the mesh's client count: how often the K-arrival trigger fires and what
+    fraction of uploads the fleet loses BEFORE anyone burns pod time on the
+    real run.
+    """
+    from repro.fed.events import simulate_scenario
+    from repro.fed.scenarios import registered_scenarios
+    cohort = max(n_clients // 8, 1)
+    out = {}
+    for name in registered_scenarios():
+        st = simulate_scenario(name, n_clients=n_clients, cohort=cohort,
+                               concurrency=2 * cohort, max_staleness=2,
+                               aggregations=6, seed=seed)
+        out[name] = {k: (round(v, 4) if isinstance(v, float) else v)
+                     for k, v in st.items() if k != "scenario"}
+    return out
+
+
 def _attach(struct_tree, sharding_tree):
     return jax.tree.map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
@@ -226,6 +248,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
     if shape.kind == "train":
         rec["server_ingest"] = measured_ingest_bytes(
             tc, cfg.param_count(), n_clients)
+        rec["fleet_scenarios"] = fleet_event_stats(max(n_clients, 8))
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
               f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
@@ -238,6 +261,12 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
             print(f"         server_ingest: up={si['bytes_up_round']/2**20:.2f}"
                   f"MiB/round down={si['bytes_down_round']/2**20:.2f}MiB/round "
                   f"(measured, {si['n_clients']} clients)")
+        if "fleet_scenarios" in rec:
+            worst = max(rec["fleet_scenarios"].items(),
+                        key=lambda kv: kv[1]["drop_rate"])
+            print(f"         fleet_scenarios: {len(rec['fleet_scenarios'])} "
+                  f"simulated; worst drop_rate={worst[1]['drop_rate']:.3f} "
+                  f"({worst[0]})")
     return rec
 
 

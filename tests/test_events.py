@@ -1,0 +1,487 @@
+"""Event-driven server subsystem: the deterministic event clock, the
+K-arrival-triggered EventLoop/EventDrivenTrainer, the scenario library and
+the client-sampler registry.
+
+The load-bearing guarantee: with ``k_arrivals`` = cohort size (and the
+default one-cohort concurrency) the event trainer consumes exactly one
+dispatch cohort per aggregation, in dispatch order, through the SAME two
+jitted phases as :class:`FederatedTrainer` -- so params, both ledgers and
+the wire_log must match bit for bit under any no-loss scenario."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import make_protocol
+from repro.data import make_classification
+from repro.fed import (EventClock, EventDrivenTrainer, EventLoop,
+                       FederatedTrainer, FedEnvironment, LatencyModel,
+                       TrainerConfig, make_sampler, make_scenario,
+                       registered_samplers, registered_scenarios,
+                       simulate_scenario)
+from repro.fed.sampling import SamplerView
+from repro.fed.scenarios import Scenario, SteadyScenario
+from repro.models.paper_models import MODEL_ZOO
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=900, n_test=240)
+
+
+def _env(n_clients=6, participation=0.5):
+    return FedEnvironment(n_clients=n_clients, participation=participation,
+                          classes_per_client=2, batch_size=10)
+
+
+def _stc():
+    return make_protocol("stc", sparsity_up=1 / 20, sparsity_down=1 / 20)
+
+
+# ---------------------------------------------------------------------------
+# event clock + event loop determinism
+# ---------------------------------------------------------------------------
+
+
+class TestEventClock:
+    def test_equal_times_pop_in_push_order(self):
+        """The heap tie-breaking invariant: (time, push-seq) strict order,
+        payloads never compared (unorderable payloads must be fine)."""
+        clock = EventClock()
+        for i, t in enumerate([2.0, 1.0, 1.0, 3.0, 1.0]):
+            clock.push(t, {"i": i})      # dicts are unorderable: seq decides
+        got = [(t, item["i"]) for t, _, item in
+               (clock.pop() for _ in range(5))]
+        assert got == [(1.0, 1), (1.0, 2), (1.0, 4), (2.0, 0), (3.0, 3)]
+        assert clock.now == 3.0
+
+    def test_rejects_bad_times_and_empty_pops(self):
+        clock = EventClock()
+        with pytest.raises(ValueError, match="finite"):
+            clock.push(math.inf, "x")
+        with pytest.raises(ValueError, match="finite"):
+            clock.push(-1.0, "x")
+        with pytest.raises(IndexError):
+            clock.pop()
+        with pytest.raises(IndexError):
+            clock.peek_time()
+
+
+class TestEventLoopDeterminism:
+    def _trace(self, seed):
+        scen = make_scenario("regional-outage",
+                             latency=LatencyModel(mean=0.8, sigma=0.6,
+                                                  hetero=0.5,
+                                                  straggler_frac=0.2))
+        loop = EventLoop(scen, 32, cohort=4, k_arrivals=4, concurrency=8,
+                         max_staleness=1, seed=seed)
+        rng = np.random.default_rng(123)    # sampler rng, fixed across seeds
+        trace = []
+        for _ in range(6):
+            while not loop.ready():
+                if loop.wants_dispatch:
+                    loop.dispatch(rng.choice(32, size=4, replace=False))
+                else:
+                    ev = loop.step()
+                    trace.append((ev.kind, round(ev.t, 12), ev.client,
+                                  ev.staleness, ev.dseq))
+            loop.take_round()
+        return trace
+
+    def test_same_seed_same_event_trace(self):
+        assert self._trace(5) == self._trace(5)
+
+    def test_different_seed_different_trace(self):
+        assert self._trace(5) != self._trace(6)
+
+    def test_take_round_orders_by_dispatch_sequence(self):
+        """Arrivals race, but an aggregation batch is consumed oldest
+        dispatch first -- the invariant behind the K=cohort bit-identity."""
+        scen = SteadyScenario(latency=LatencyModel(mean=1.0, sigma=1.5))
+        loop = EventLoop(scen, 16, cohort=8, k_arrivals=8, concurrency=8,
+                         max_staleness=0, seed=0)
+        loop.dispatch(np.arange(8))
+        while not loop.ready():
+            loop.step()
+        kept = loop.take_round()
+        assert [r.dseq for r in kept] == list(range(8))
+        assert loop.version == 1 and loop.buffer == []
+
+    def test_loop_validates_configuration(self):
+        scen = SteadyScenario()
+        with pytest.raises(ValueError, match="k_arrivals"):
+            EventLoop(scen, 8, cohort=2, k_arrivals=0, concurrency=4,
+                      max_staleness=1)
+        with pytest.raises(ValueError, match="concurrency"):
+            EventLoop(scen, 8, cohort=4, k_arrivals=2, concurrency=2,
+                      max_staleness=1)
+        with pytest.raises(ValueError, match="max_staleness"):
+            EventLoop(scen, 8, cohort=2, k_arrivals=2, concurrency=4,
+                      max_staleness=-1)
+        with pytest.raises(ValueError, match="cohort"):
+            EventLoop(scen, 8, cohort=9, k_arrivals=2, concurrency=16,
+                      max_staleness=1)
+
+
+# ---------------------------------------------------------------------------
+# event trainer: bit-identity + quiescence + staleness drops
+# ---------------------------------------------------------------------------
+
+
+class TestEventDrivenTrainer:
+    @pytest.mark.parametrize("name", ["stc", "signsgd"])
+    def test_k_cohort_bit_identical_to_synchronous(self, data, name):
+        """Acceptance: K = cohort + on-time (homogeneous) latencies ==
+        FederatedTrainer bit for bit -- params, measured AND analytic
+        ledgers, wire_log, shared history columns."""
+        train, test = data
+        kw = {"stc": dict(sparsity_up=1 / 20, sparsity_down=1 / 20)}
+        rounds = 4
+        sync = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                make_protocol(name, **kw.get(name, {})),
+                                TrainerConfig(lr=0.05, seed=0))
+        sync.run(rounds, eval_every=2)
+        ev = EventDrivenTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(),
+            make_protocol(name, **kw.get(name, {})),
+            TrainerConfig(lr=0.05, seed=0),
+            scenario=SteadyScenario(latency=LatencyModel(mean=3.0,
+                                                         sigma=0.0)))
+        ev.run(rounds, eval_every=2)
+        np.testing.assert_array_equal(np.asarray(sync.params_vec),
+                                      np.asarray(ev.params_vec))
+        assert sync.bits_up == ev.bits_up
+        assert sync.bits_down == ev.bits_down
+        assert sync.bits_up_analytic == ev.bits_up_analytic
+        assert sync.bits_down_analytic == ev.bits_down_analytic
+        assert sync.wire_log == ev.wire_log
+        for hs, hb in zip(sync.history, ev.history):
+            for key in hs:          # shared columns identical
+                assert hs[key] == hb[key], key
+        assert ev.n_dropped == 0 and ev.n_lost == 0
+
+    def test_k_cohort_bit_identical_under_heterogeneous_latency(self, data):
+        """Stronger than the acceptance bar: because the buffer is consumed
+        in dispatch order, identity survives racing heterogeneous arrivals
+        as long as nothing is lost or dropped."""
+        train, test = data
+        rounds = 3
+        sync = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                _stc(), TrainerConfig(lr=0.05, seed=0))
+        sync.run(rounds, eval_every=rounds)
+        ev = EventDrivenTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(), _stc(),
+            TrainerConfig(lr=0.05, seed=0),
+            scenario=SteadyScenario(latency=LatencyModel(mean=0.7, sigma=0.9,
+                                                         hetero=0.8)))
+        ev.run(rounds, eval_every=rounds)
+        np.testing.assert_array_equal(np.asarray(sync.params_vec),
+                                      np.asarray(ev.params_vec))
+        assert sync.wire_log == ev.wire_log
+
+    def test_zero_arrival_quiescence_freezes_server(self, data):
+        """advance_to with nothing in flight serves zero events and leaves
+        params, the server codec state and every ledger untouched."""
+        train, test = data
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                _stc(), TrainerConfig(lr=0.05, seed=0))
+        params0 = np.asarray(tr.params_vec).copy()
+        res0 = np.asarray(tr.server_state.residual).copy()
+        assert tr.advance_to(1e9) == 0
+        assert tr.bits_up == 0.0 and tr.bits_down == 0.0
+        assert tr.wire_log == [] and tr.agg_log == [] and tr.round == 0
+        np.testing.assert_array_equal(np.asarray(tr.params_vec), params0)
+        np.testing.assert_array_equal(np.asarray(tr.server_state.residual),
+                                      res0)
+        # sub-K arrivals buffer but never aggregate: still quiescent
+        tr._dispatch_cohort()
+        k_minus_1 = tr.k_arrivals - 1
+        served = 0
+        while served < k_minus_1:
+            served += tr.advance_to(tr.loop.clock.peek_time())
+        assert tr.round == 0 and len(tr.loop.buffer) == k_minus_1
+        np.testing.assert_array_equal(np.asarray(tr.params_vec), params0)
+        np.testing.assert_array_equal(np.asarray(tr.server_state.residual),
+                                      res0)
+
+    def test_total_loss_scenario_fails_loudly(self, data):
+        """A scenario that loses every update must raise, not spin forever."""
+
+        @dataclasses.dataclass(frozen=True)
+        class BlackHole(Scenario):
+            name = "black-hole-test"
+
+            def loss_prob(self, t, ids):
+                return np.ones(np.asarray(ids).size, np.float64)
+
+        train, test = data
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                _stc(), TrainerConfig(lr=0.05, seed=0),
+                                scenario=BlackHole())
+        with pytest.raises(RuntimeError, match="starved"):
+            tr.run_round()
+        assert tr.n_lost > 0 and tr.bits_up == 0.0    # lost bills nothing
+
+    def test_staleness_drops_bill_bits_but_never_aggregate(self, data):
+        """K < concurrency overlap: updates arriving > max_staleness model
+        versions after dispatch are dropped, their upload bits billed."""
+        train, test = data
+        env = _env(n_clients=8, participation=0.25)    # cohort of 2
+        # huge latency spread: some updates land many aggregations late
+        scen = SteadyScenario(latency=LatencyModel(mean=1.0, sigma=2.0,
+                                                   hetero=1.0))
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, env,
+                                _stc(), TrainerConfig(lr=0.05, seed=0),
+                                scenario=scen, k_arrivals=2, concurrency=8,
+                                max_staleness=0)
+        tr.run(8, eval_every=8)
+        drops = [r for r in tr.event_log if r["kind"] == "drop"]
+        assert tr.n_dropped == len(drops) > 0
+        assert all(r["staleness"] > 0 and r["bits_up"] > 0.0 for r in drops)
+        assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+        # conservation: every billed event is an arrival or a drop
+        billed = [r for r in tr.event_log if r["kind"] in ("arrival", "drop")]
+        agg_total = sum(r["aggregated"] for r in tr.agg_log)
+        assert agg_total + tr.n_dropped == len(billed)
+
+    def test_event_ingest_matches_dense_aggregation(self, data):
+        """TrainerConfig(ingest=True) rides the fused decode->aggregate
+        path; params must match the dense event trainer to summation-order
+        noise (the fused path accumulates in a different order, same as the
+        buffered trainer's ingest mode)."""
+        train, test = data
+        kw = dict(scenario=SteadyScenario(latency=LatencyModel(mean=0.8,
+                                                               sigma=0.4)),
+                  k_arrivals=3, concurrency=6, max_staleness=4)
+        dense = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                   _stc(), TrainerConfig(lr=0.05, seed=0),
+                                   **kw)
+        dense.run(4, eval_every=4)
+        fused = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                   _stc(),
+                                   TrainerConfig(lr=0.05, seed=0,
+                                                 ingest=True), **kw)
+        fused.run(4, eval_every=4)
+        np.testing.assert_allclose(np.asarray(dense.params_vec),
+                                   np.asarray(fused.params_vec),
+                                   rtol=1e-5, atol=1e-7)
+        assert dense.bits_up == pytest.approx(fused.bits_up)
+        assert dense.n_dropped == fused.n_dropped
+        assert dense.n_lost == fused.n_lost
+
+    def test_legacy_codec_without_mask_api_is_rejected(self, data):
+        train, test = data
+        from repro.core import Codec, register_protocol
+        from repro.core.protocols import _REGISTRY
+        import jax.numpy as jnp
+
+        @register_protocol
+        @dataclasses.dataclass(frozen=True)
+        class LegacyMeanEv(Codec):
+            name = "legacy-mean-events-test"
+
+            def encode(self, delta, state):
+                return delta, state, None
+
+            def aggregate(self, msgs, server_state):   # pre-mask signature
+                return jnp.mean(msgs, axis=0), server_state, None
+
+            def upload_bits(self, numel):
+                return 32.0 * numel
+
+            def download_bits(self, numel, n_participating=1):
+                return 32.0 * numel
+
+        try:
+            with pytest.raises(TypeError, match="mask"):
+                EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                   make_protocol("legacy-mean-events-test"),
+                                   TrainerConfig(lr=0.05))
+        finally:
+            _REGISTRY.pop("legacy-mean-events-test", None)
+
+
+# ---------------------------------------------------------------------------
+# scenario library
+# ---------------------------------------------------------------------------
+
+
+class TestScenarios:
+    def test_registry_rejects_unknown_names_loudly(self):
+        with pytest.raises(KeyError, match="steady"):
+            make_scenario("no-such-scenario")
+
+    def test_every_registered_scenario_simulates(self):
+        """Model-free 3-aggregation smoke through the event loop for every
+        registration: conservation + determinism per scenario."""
+        assert len(registered_scenarios()) >= 5
+        for name in registered_scenarios():
+            a = simulate_scenario(name, n_clients=48, cohort=6,
+                                  concurrency=12, max_staleness=2,
+                                  aggregations=3, seed=3)
+            b = simulate_scenario(name, n_clients=48, cohort=6,
+                                  concurrency=12, max_staleness=2,
+                                  aggregations=3, seed=3)
+            assert a == b, name
+            assert a["aggregations"] == 3
+            assert (a["arrived"] + a["dropped"] + a["lost"] + a["pending"]
+                    == a["dispatched"]), name
+            assert a["sim_time"] > 0.0 and a["aggs_per_time"] > 0.0
+
+    @pytest.mark.parametrize("name", sorted(registered_scenarios()))
+    def test_every_registered_scenario_trains_3_rounds(self, data, name):
+        """Satellite acceptance: every registration round-trips through a
+        3-round training smoke on the event trainer."""
+        train, test = data
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test,
+                                _env(n_clients=8, participation=0.25),
+                                _stc(), TrainerConfig(lr=0.05, seed=0),
+                                scenario=name, k_arrivals=2, concurrency=4,
+                                max_staleness=3)
+        hist = tr.run(3, eval_every=3)
+        assert tr.round == 3 and len(hist) == 1
+        assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+        assert hist[-1]["sim_time"] > 0.0
+
+    def test_scenario_hooks_shape_the_fleet(self):
+        rng = np.random.default_rng(0)
+        ids = np.arange(64)
+        scales = np.ones(64)
+        # diurnal: mid-period latency strictly above trough latency
+        di = make_scenario("diurnal", latency=LatencyModel(sigma=0.0))
+        lat0, _ = di.sample(0.0, ids, scales, rng)
+        lat_mid, _ = di.sample(di.period / 2.0, ids, scales, rng)
+        np.testing.assert_allclose(lat_mid, lat0 * (1.0 + di.amp))
+        # flash crowd: surge inside the window only
+        fc = make_scenario("flash-crowd", latency=LatencyModel(sigma=0.0))
+        inside, _ = fc.sample(fc.start, ids, scales, rng)
+        outside, _ = fc.sample(fc.start + fc.width, ids, scales, rng)
+        np.testing.assert_allclose(inside, outside * fc.surge)
+        # regional outage: losses concentrate on ONE region inside the window
+        ro = make_scenario("regional-outage", loss=1.0)
+        _, lost = ro.sample(0.0, ids, scales, rng)
+        assert set(ids[lost] % ro.regions) == {0}
+        assert not ro.sample(ro.width, ids, scales, rng)[1].any()
+        # straggler drift: the slow subpopulation slows with time
+        sd = make_scenario("straggler-drift",
+                           latency=LatencyModel(sigma=0.0))
+        early, _ = sd.sample(0.0, ids, scales, rng)
+        late, _ = sd.sample(10.0, ids, scales, rng)
+        slow = late > early * 1.5
+        assert 0 < slow.sum() < ids.size            # both populations exist
+        # adaptive deadline: exactly the draws beyond factor x own median
+        ad = make_scenario("adaptive-deadline",
+                           latency=LatencyModel(sigma=0.8))
+        lats, lost = ad.sample(0.0, ids, scales, rng)
+        np.testing.assert_array_equal(
+            lost, lats > ad.factor * scales * ad.latency.mean)
+        assert 0 < lost.sum() < ids.size
+
+    def test_scenario_validation_is_typed(self):
+        with pytest.raises(ValueError, match="period"):
+            make_scenario("diurnal", period=0.0)
+        with pytest.raises(ValueError, match="loss"):
+            make_scenario("regional-outage", loss=1.5)
+        with pytest.raises(ValueError, match="frac"):
+            make_scenario("straggler-drift", frac=-0.1)
+        with pytest.raises(ValueError, match="factor"):
+            make_scenario("adaptive-deadline", factor=0.0)
+
+
+# ---------------------------------------------------------------------------
+# client sampler registry
+# ---------------------------------------------------------------------------
+
+
+class TestSamplers:
+    def test_registry_rejects_unknown_names_loudly(self):
+        with pytest.raises(KeyError, match="uniform"):
+            make_sampler("no-such-sampler")
+        assert set(registered_samplers()) >= {"uniform", "staleness"}
+
+    def test_uniform_matches_synchronous_selection_exactly(self):
+        """The byte-for-byte contract behind the K=cohort bit-identity."""
+        view = SamplerView(0, np.zeros(20, np.int64), np.zeros(20, bool))
+        got = make_sampler("uniform").select(
+            np.random.default_rng(9), view, 5)
+        want = np.random.default_rng(9).choice(20, size=5, replace=False)
+        np.testing.assert_array_equal(got, want)
+
+    def test_staleness_sampler_prefers_unseen_and_skips_inflight(self):
+        n = 40
+        last_seen = np.zeros(n, np.int64)
+        last_seen[: n // 2] = 99            # first half just participated
+        inflight = np.zeros(n, bool)
+        inflight[0] = True
+        view = SamplerView(100, last_seen, inflight)
+        smp = make_sampler("staleness", bias=3.0)
+        rng = np.random.default_rng(0)
+        picks = np.concatenate([smp.select(rng, view, 8) for _ in range(40)])
+        assert not (picks == 0).any()               # in-flight never picked
+        stale_frac = (picks >= n // 2).mean()
+        assert stale_frac > 0.9                      # stale half dominates
+        # duplicate-free cohorts
+        one = smp.select(rng, view, 8)
+        assert len(set(one.tolist())) == 8
+
+    def test_staleness_sampler_readmits_inflight_when_starved(self):
+        view = SamplerView(5, np.zeros(4, np.int64), np.ones(4, bool))
+        got = make_sampler("staleness").select(
+            np.random.default_rng(1), view, 3)
+        assert len(set(got.tolist())) == 3
+
+    def test_event_trainer_runs_with_staleness_sampler(self, data):
+        train, test = data
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test,
+                                _env(n_clients=8, participation=0.25),
+                                _stc(), TrainerConfig(lr=0.05, seed=0),
+                                sampler="staleness", k_arrivals=2,
+                                concurrency=4, max_staleness=3)
+        tr.run(3, eval_every=3)
+        assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+
+
+# ---------------------------------------------------------------------------
+# arrivals edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestArrivalEdgeCases:
+    def test_latency_model_validates_fields_with_typed_errors(self):
+        with pytest.raises(ValueError, match="mean"):
+            LatencyModel(mean=0.0)
+        with pytest.raises(ValueError, match="mean"):
+            LatencyModel(mean=-1.0)
+        with pytest.raises(ValueError, match="sigma"):
+            LatencyModel(sigma=-0.1)
+        with pytest.raises(ValueError, match="hetero"):
+            LatencyModel(hetero=-0.5)
+        with pytest.raises(ValueError, match="straggler_frac"):
+            LatencyModel(straggler_frac=1.5)
+        with pytest.raises(ValueError, match="straggler_scale"):
+            LatencyModel(straggler_scale=0.0)
+
+    def test_exact_deadline_multiples_bucket_deterministically(self):
+        """0.3 / 0.1 == 2.999...96 in binary floating point: an exact
+        multiple of the deadline must STILL bucket as L/deadline rounds
+        late, whatever the platform's division rounding did."""
+        from repro.fed import ArrivalSimulator
+        sim = ArrivalSimulator(LatencyModel(), n_clients=4, deadline=0.1)
+        late = sim.rounds_late(np.asarray([0.3, 0.1, 0.25, 0.0999999999999]))
+        np.testing.assert_array_equal(late, [3, 1, 2, 1])
+        # and a genuinely-below-multiple latency still floors down
+        np.testing.assert_array_equal(sim.rounds_late(np.asarray([0.29])),
+                                      [2])
+
+    def test_dispatch_with_latencies_matches_dispatch(self):
+        from repro.fed import ArrivalSimulator
+        lm = LatencyModel(mean=1.5, sigma=0.0)
+        a = ArrivalSimulator(lm, n_clients=4, deadline=1.0, seed=0)
+        b = ArrivalSimulator(lm, n_clients=4, deadline=1.0, seed=0)
+        lats = a.dispatch(0, [0, 1], ["x", "y"])
+        b.dispatch_with_latencies(0, [0, 1], ["x", "y"], lats)
+        assert a.collect(1) == b.collect(1)
+        with pytest.raises(ValueError, match="latencies"):
+            b.dispatch_with_latencies(0, [0, 1], ["x", "y"], [1.0])

@@ -1,0 +1,144 @@
+"""Chaos benchmark: event-driven training under every registered fault.
+
+    PYTHONPATH=src python -m benchmarks.faults_bench [--smoke]
+
+One hardened :class:`EventDrivenTrainer` run per registered fault class on
+the flash-outage fleet (the composed worst-case scenario), against a
+no-fault baseline on the same seeds.  Per fault:
+
+  faults/<fault>/acc              -- accuracy after the aggregation budget
+  faults/<fault>/bits_up          -- total billed upstream bits (quarantined
+                                     and duplicate arrivals bill, so chaos
+                                     shows up as wasted bandwidth, not
+                                     missing ledger rows)
+  faults/<fault>/quarantine_rate  -- quarantined / served events
+  faults/<fault>/duplicate_rate   -- duplicates rejected / served events
+
+plus ``faults/resume/params_max_abs_diff``: a server-kill at a fixed event
+index followed by a checkpoint restore, reporting the max |param| gap vs
+the uninterrupted baseline (the crash-consistency contract says 0.0).
+
+Written to ``benchmarks/BENCH_faults.json`` (unit "mixed" -- report-only in
+the regression gate).  The headline reading: corruption faults cost bits
+and a little accuracy (quarantined updates are paid for but discarded),
+duplicate/replay faults cost nothing but rejected bandwidth, and none of
+them crash or wedge the server.
+
+``--smoke`` is the CI lane: a 2-round chaos pass over every registered
+fault class plus the kill/resume check, seconds not minutes.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.data import make_classification
+from repro.fed import (EventDrivenTrainer, FedEnvironment, LatencyModel,
+                       ServerKilled, TrainerConfig, make_fault,
+                       registered_faults)
+from repro.models.paper_models import MODEL_ZOO
+
+# same heterogeneous straggler fleet as the events bench, so the
+# faults/<fault> rows are comparable with the events/<scenario> families
+_LATENCY = LatencyModel(mean=0.6, sigma=0.5, hetero=0.4,
+                        straggler_frac=0.15, straggler_scale=4.0)
+_N_CLIENTS = 100
+_ETA = 1 / 10
+_AGGREGATIONS = 10
+_MAX_STALENESS = 2
+
+
+def _trainer(train, test, faults, *, n_clients=_N_CLIENTS, **kw):
+    from repro.core import make_protocol
+    from repro.fed import make_scenario
+    env = FedEnvironment(n_clients=n_clients, participation=_ETA,
+                         classes_per_client=4, batch_size=10)
+    proto = make_protocol("stc", sparsity_up=1 / 50, sparsity_down=1 / 50)
+    cohort = env.participants_per_round
+    return EventDrivenTrainer(
+        MODEL_ZOO["logreg"], train, test, env, proto,
+        TrainerConfig(lr=0.06, seed=0, ingest=True),
+        scenario=make_scenario("flash-outage"),
+        k_arrivals=kw.pop("k_arrivals", cohort),
+        concurrency=kw.pop("concurrency", 2 * cohort),
+        max_staleness=kw.pop("max_staleness", _MAX_STALENESS),
+        faults=faults, **kw)
+
+
+def _chaos_rows(train, test, aggregations, *, n_clients, verbose):
+    """One training run per fault class; ``server-kill`` is exercised by the
+    dedicated resume check instead (a mid-sweep kill is not a sweep row)."""
+    rows = []
+    for name in sorted(registered_faults()):
+        if name == "server-kill":
+            continue
+        tr = _trainer(train, test, make_fault(name), n_clients=n_clients)
+        hist = tr.run(aggregations, eval_every=aggregations)
+        acc = hist[-1]["acc"]
+        st = tr.loop.stats()
+        note = (f"aggs={aggregations} clients={n_clients} "
+                f"scenario=flash-outage K={tr.k_arrivals} "
+                f"max_staleness={tr.max_staleness}")
+        stem = f"faults/{name}"
+        rows.append((f"{stem}/acc", acc, note))
+        rows.append((f"{stem}/bits_up", tr.bits_up, note))
+        rows.append((f"{stem}/quarantine_rate", st["quarantine_rate"], note))
+        rows.append((f"{stem}/duplicate_rate", st["duplicate_rate"], note))
+        if verbose:
+            print(f"{stem}: acc={acc:.3f} upMB={tr.bits_up / 8e6:.3f} "
+                  f"quarantine={st['quarantine_rate']:.3f} "
+                  f"dup={st['duplicate_rate']:.3f}")
+    return rows
+
+
+def _resume_row(train, test, aggregations, *, n_clients, verbose):
+    """Kill the server mid-run, restore from the last checkpoint, finish,
+    and report the max param gap vs the uninterrupted run (contract: 0)."""
+    ref = _trainer(train, test, "none", n_clients=n_clients)
+    ref.run(aggregations, eval_every=aggregations)
+
+    with tempfile.NamedTemporaryFile(suffix=".ck") as f:
+        killed = _trainer(train, test,
+                          make_fault("server-kill", at_event=9),
+                          n_clients=n_clients, ckpt_path=f.name,
+                          ckpt_every=2)
+        try:
+            killed.run(aggregations, eval_every=aggregations)
+        except ServerKilled:
+            pass
+        resumed = _trainer(train, test, "none", n_clients=n_clients)
+        resumed.restore_checkpoint(f.name)
+        while resumed.round < aggregations:
+            resumed.run_round()
+
+    gap = float(np.max(np.abs(np.asarray(ref.params_vec)
+                              - np.asarray(resumed.params_vec))))
+    ledgers_ok = (ref.bits_up == resumed.bits_up
+                  and ref.event_log == resumed.event_log)
+    note = (f"kill@event9 ckpt_every=2 aggs={aggregations} "
+            f"ledgers_identical={ledgers_ok}")
+    if verbose:
+        print(f"faults/resume: params_max_abs_diff={gap} "
+              f"ledgers_identical={ledgers_ok}")
+    return [("faults/resume/params_max_abs_diff", gap, note)]
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    if smoke:
+        train, test = make_classification(seed=0, n=600, n_test=160)
+        rows = _chaos_rows(train, test, 2, n_clients=40, verbose=verbose)
+        rows += _resume_row(train, test, 3, n_clients=40, verbose=verbose)
+        return rows
+    train, test = make_classification(seed=0, n=6000, n_test=1200)
+    rows = _chaos_rows(train, test, _AGGREGATIONS, n_clients=_N_CLIENTS,
+                       verbose=verbose)
+    rows += _resume_row(train, test, _AGGREGATIONS, n_clients=_N_CLIENTS,
+                        verbose=verbose)
+    return rows
+
+
+if __name__ == "__main__":
+    run(verbose=True, smoke="--smoke" in sys.argv)

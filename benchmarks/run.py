@@ -27,6 +27,7 @@ BENCH_ASYNC_PATH = os.path.join(_HERE, "BENCH_async.json")
 BENCH_CHUNKED_PATH = os.path.join(_HERE, "BENCH_chunked.json")
 BENCH_INGEST_PATH = os.path.join(_HERE, "BENCH_ingest.json")
 BENCH_EVENTS_PATH = os.path.join(_HERE, "BENCH_events.json")
+BENCH_FAULTS_PATH = os.path.join(_HERE, "BENCH_faults.json")
 
 
 def _write_bench(path: str, rows, unit: str = "us") -> None:
@@ -74,6 +75,10 @@ def write_bench_events(rows) -> None:
     _write_bench(BENCH_EVENTS_PATH, rows, unit="mixed")
 
 
+def write_bench_faults(rows) -> None:
+    _write_bench(BENCH_FAULTS_PATH, rows, unit="mixed")
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
@@ -82,11 +87,11 @@ def main() -> None:
 
     rows = []
     which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                     "events", "async", "fig3", "fig5", "fig2", "table4",
-                     "fig8", "roofline"]
+                     "events", "faults", "async", "fig3", "fig5", "fig2",
+                     "table4", "fig8", "roofline"]
     if quick:
         which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                         "events", "fig3"]
+                         "events", "faults", "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -116,6 +121,12 @@ def main() -> None:
             if not quick:    # quick = smoke scale; keep the tracked file
                 write_bench_events(erows)    # at the full scenario sweep
             rows += erows
+        elif name == "faults":
+            from benchmarks import faults_bench
+            frows = faults_bench.run(verbose=False, smoke=quick)
+            if not quick:    # quick = smoke scale; keep the tracked file
+                write_bench_faults(frows)    # at the full chaos sweep
+            rows += frows
         elif name == "async":
             from benchmarks import async_bench
             arows = async_bench.run(verbose=False)

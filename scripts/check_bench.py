@@ -29,7 +29,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json",
                  "benchmarks/BENCH_chunked.json",
                  "benchmarks/BENCH_ingest.json",
-                 "benchmarks/BENCH_events.json")
+                 "benchmarks/BENCH_events.json",
+                 "benchmarks/BENCH_faults.json")
 
 
 def row_value(row: dict):

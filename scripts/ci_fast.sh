@@ -46,4 +46,7 @@ python -m benchmarks.ingest_bench --smoke
 stage events-smoke
 python -m benchmarks.events_bench --smoke
 
+stage faults-smoke
+python -m benchmarks.faults_bench --smoke
+
 stage done

@@ -6,8 +6,15 @@
 Arrays are stored as (dtype, shape, raw bytes); bfloat16 round-trips via a
 uint16 view.  The federated trainer and the distributed train_step state are
 both plain pytrees, so one pair of functions covers the whole framework.
+
+``save_state`` / ``restore_state`` are the template-free tagged variants for
+composite trainer state whose shape is data-dependent (the event-driven
+trainer's crash-consistent checkpoints: event clock, in-flight buffer, RNG
+states, logs).
 """
 
-from .msgpack_ckpt import restore_checkpoint, save_checkpoint
+from .msgpack_ckpt import (restore_checkpoint, restore_state,
+                           save_checkpoint, save_state)
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = ["save_checkpoint", "restore_checkpoint",
+           "save_state", "restore_state"]

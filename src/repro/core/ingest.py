@@ -46,7 +46,7 @@ class IngestAccumulator:
     """
 
     __slots__ = ("numel", "sum", "weight_mass", "n_msgs", "nnz",
-                 "stream_bits")
+                 "stream_bits", "n_screened")
 
     def __init__(self, numel: int):
         self.numel = int(numel)
@@ -55,6 +55,7 @@ class IngestAccumulator:
         self.n_msgs = 0
         self.nnz = 0
         self.stream_bits = 0.0
+        self.n_screened = 0
 
     # -- per-message bookkeeping ---------------------------------------------
     def begin_message(self, weight: float, *, bits: float = 0.0) -> None:
@@ -63,6 +64,13 @@ class IngestAccumulator:
         self.n_msgs += 1
         self.weight_mass += float(weight)
         self.stream_bits += float(bits)
+
+    def note_screened(self) -> None:
+        """Record one message rejected by the codec's norm-bound screen
+        (``Codec.norm_bound`` with ``norm_policy="reject"``): it was counted
+        by :meth:`begin_message` with zero weight -- bits billed, zero
+        aggregate contribution."""
+        self.n_screened += 1
 
     # -- scatter paths (weight_mass is NOT touched here) ---------------------
     def scatter_ternary(self, positions: np.ndarray, signs: np.ndarray,

@@ -59,6 +59,7 @@ al., 2020) -- as the proof that third-party codecs are drop-in.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import ClassVar, Optional
 
 import jax
@@ -181,6 +182,23 @@ class Codec:
     # that is s rounds old enters the weighted mean with weight (1+s)^-decay
     # (FedBuff-style polynomial decay; 0.0 = ignore staleness entirely)
     staleness_decay: float = 0.5
+    # optional norm-bound screening of arriving updates (server hardening):
+    # a message whose l2 norm exceeds ``norm_bound`` is either scaled down
+    # to the bound ("clip") or dropped from the aggregate with zero weight
+    # ("reject") -- its bits still bill either way.  ``None`` disables the
+    # screen entirely (the default: no extra norms computed, bit-identical
+    # to the pre-screening aggregate paths).
+    norm_bound: Optional[float] = None
+    norm_policy: str = "clip"               # "clip" | "reject"
+
+    def __post_init__(self):
+        if self.norm_policy not in ("clip", "reject"):
+            raise ValueError(
+                f"norm_policy must be 'clip' or 'reject', "
+                f"got {self.norm_policy!r}")
+        if self.norm_bound is not None and not self.norm_bound > 0.0:
+            raise ValueError(
+                f"norm_bound must be > 0 (or None), got {self.norm_bound}")
 
     # -- state ------------------------------------------------------------
     def init_client_state(self, numel: int):
@@ -237,10 +255,27 @@ class Codec:
             w = w * decay
         return w
 
+    def _screen_combine(self, msgs: jnp.ndarray, mask):
+        """Apply the norm-bound screen inside :meth:`combine` (jit-safe):
+        "clip" rescales outlier rows to the bound, "reject" zeroes their
+        participation weight via the mask."""
+        flat = msgs.reshape(msgs.shape[0], -1)
+        norms = jnp.sqrt(jnp.sum(flat * flat, axis=1))
+        bound = jnp.float32(self.norm_bound)
+        if self.norm_policy == "clip":
+            scale = jnp.minimum(1.0, bound / jnp.maximum(norms, 1e-30))
+            shape = (msgs.shape[0],) + (1,) * (msgs.ndim - 1)
+            return msgs * scale.reshape(shape), mask
+        keep = (norms <= bound).astype(jnp.float32)
+        mask = keep if mask is None else jnp.asarray(mask, jnp.float32) * keep
+        return msgs, mask
+
     def combine(self, msgs: jnp.ndarray, mask=None, staleness=None):
         """Combine (P, ...) messages over the client axis: the plain mean when
         unmasked, otherwise the staleness-weighted mean over the arrived
         messages (weight mass 0 -- nothing arrived -- combines to zero)."""
+        if self.norm_bound is not None:
+            msgs, mask = self._screen_combine(msgs, mask)
         if mask is None and staleness is None:
             return jnp.mean(msgs, axis=0)
         if mask is None:
@@ -297,6 +332,35 @@ class Codec:
         cannot represent exact zeros -- see :func:`wire.pack_sign_words`)."""
         raise NotImplementedError(
             f"{type(self).__name__} has no wire format")
+
+    def validate_wire(self, msg: wire.WireMessage, *,
+                      direction: str = "up") -> None:
+        """Admission-control validation of ONE arriving wire message:
+        raises :class:`wire.WireDecodeError` on any corruption class the
+        decoder can detect (truncated words, dangling unary runs, position
+        or nnz overflow), returns None on success.  The default decodes the
+        full message and discards it; codecs with a cheaper structural
+        check (STC's fields-only parse, signSGD's size check) override it.
+        """
+        self.decode_wire(msg, direction=direction)
+
+    def wire_norm(self, msg: wire.WireMessage) -> float:
+        """Cheap l2-norm estimate of ONE encoded message, from its wire
+        side information alone (no decode) -- the ingest paths' input to
+        the ``norm_bound`` screen."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no wire-norm estimate; norm "
+            "screening on the wire ingest path needs wire_norm()")
+
+    def _screen_weight(self, norm: float) -> tuple[float, bool]:
+        """Host-side twin of :meth:`_screen_combine` for the streaming
+        ingest paths: ``(value_scale, rejected)`` for one message of update
+        norm ``norm`` (only called when ``norm_bound`` is set)."""
+        if norm <= self.norm_bound or norm <= 0.0:
+            return 1.0, False
+        if self.norm_policy == "clip":
+            return float(self.norm_bound) / float(norm), False
+        return 0.0, True
 
     def encode_wire_batch(self, msgs: np.ndarray, *,
                           direction: str = "up") -> wire.WireBatch:
@@ -368,6 +432,16 @@ class Codec:
                      weight: float) -> None:
         """One dense (decoded, or never wire-encoded) message into the
         accumulator -- the fused wire paths' bit-exactness oracle."""
+        if self.norm_bound is not None:
+            norm = float(np.linalg.norm(np.asarray(vec, np.float64)))
+            scale, rejected = self._screen_weight(norm)
+            if rejected:
+                acc.begin_message(0.0)
+                acc.note_screened()
+                return
+            acc.begin_message(weight)
+            acc.add_dense(vec, weight * scale)
+            return
         acc.begin_message(weight)
         acc.add_dense(vec, weight)
 
@@ -381,8 +455,22 @@ class Codec:
     def ingest_wire(self, acc: IngestAccumulator, msg, weight: float, *,
                     direction: str = "up") -> None:
         """One arriving wire message: account its weight + measured bits,
-        then scatter its decoded fields into the accumulator."""
-        acc.begin_message(weight, bits=self.measured_message_bits(msg))
+        then scatter its decoded fields into the accumulator.  With
+        ``norm_bound`` set, the message's wire-side norm estimate is
+        screened first -- a rejected message still bills its bits but
+        enters the aggregate with zero weight."""
+        bits = self.measured_message_bits(msg)
+        if self.norm_bound is not None:
+            scale, rejected = self._screen_weight(self.wire_norm(msg))
+            if rejected:
+                acc.begin_message(0.0, bits=bits)
+                acc.note_screened()
+                return
+            acc.begin_message(weight, bits=bits)
+            self.ingest_wire_chunk(acc, msg, weight * scale,
+                                   direction=direction)
+            return
+        acc.begin_message(weight, bits=bits)
         self.ingest_wire_chunk(acc, msg, weight, direction=direction)
 
     def ingest_wire_batch(self, acc: IngestAccumulator, batch, weights, *,
@@ -534,6 +622,19 @@ class SignSGDCodec(Codec):
 
     def decode_wire(self, msg, *, direction="up"):
         return wire.unpack_sign_words(msg)
+
+    def validate_wire(self, msg, *, direction="up"):
+        # a sign plane is exactly numel bits; anything else is truncation
+        # or padding corruption, by construction
+        if int(msg.bit_len) != int(msg.numel):
+            raise wire.WireDecodeError(
+                "corrupt sign plane: bit_len != numel")
+        wire.sign_plane_bits(msg, backend=self.wire_backend)
+
+    def wire_norm(self, msg):
+        # every coordinate is exactly ±sign_step, so the norm is constant
+        # (the screen is inert here unless the bound is set below it)
+        return self.sign_step * math.sqrt(int(msg.numel))
 
     def wire_bound_bits(self, numel, nnz, direction="up"):
         return float(numel)                 # measured == analytic, exactly
@@ -687,6 +788,16 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
     def decode_wire(self, msg, *, direction="up"):
         return wire.decode_ternary_words(msg, self._wire_p(direction))
 
+    def validate_wire(self, msg, *, direction="up"):
+        # fields-only parse: every decoder corruption check fires without
+        # materializing the dense vector
+        wire.decode_ternary_fields(msg, self._wire_p(direction),
+                                   backend=self.wire_backend)
+
+    def wire_norm(self, msg):
+        # a ternary message is nnz coordinates of magnitude µ exactly
+        return float(msg.mu) * math.sqrt(max(int(msg.nnz), 0))
+
     def encode_wire_batch(self, msgs, *, direction="up"):
         return wire.encode_ternary_words_batch(
             np.asarray(msgs), self._wire_p(direction),
@@ -733,6 +844,12 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
         # multi-segment field decode + one scatter per bounded word block
         # (bitwise the sequential ingest_wire loop: np.add.at applies in
         # element order, and the fields come out message-major)
+        if self.norm_bound is not None:
+            # screened rounds take the per-message path: the screen is
+            # per-message anyway, and this keeps batch == oracle bitwise
+            # (a rejected row must not scatter or count nnz)
+            return Codec.ingest_wire_batch(self, acc, batch, weights,
+                                           direction=direction)
         w = np.asarray(weights, np.float64)
         for i in range(batch.n_msgs):
             acc.begin_message(float(w[i]),

@@ -650,6 +650,9 @@ def decode_ternary_fields(msg: WireMessage, p: float, *,
     """
     b = _b_star_checked(p)
     if msg.bit_len == 0:
+        if int(msg.nnz) != 0:
+            raise WireDecodeError(
+                "corrupt golomb stream: decoded nnz mismatch")
         return np.zeros(0, np.int64), np.zeros(0, np.float32)
     words = np.ascontiguousarray(msg.words)
     _check_bit_len(msg.bit_len, words.size)
@@ -657,6 +660,11 @@ def decode_ternary_fields(msg: WireMessage, p: float, *,
     _, positions, signs = _decode_stream_fields(
         bits, np.zeros(1, np.int64), np.asarray([msg.bit_len], np.int64),
         msg.numel, b)
+    # integrity: the advertised nnz is side information the decoder can
+    # cross-check for free -- a mutated stream that still parses but yields
+    # a different codeword count is corruption, not data
+    if positions.size != int(msg.nnz):
+        raise WireDecodeError("corrupt golomb stream: decoded nnz mismatch")
     return positions, signs
 
 
@@ -672,13 +680,22 @@ def decode_ternary_fields_batch(batch: WireBatch, p: float, *,
     """
     b = _b_star_checked(p)
     if batch.n_msgs == 0 or int(batch.bit_len.sum()) == 0:
+        if batch.n_msgs and np.any(np.asarray(batch.nnz) != 0):
+            raise WireDecodeError(
+                "corrupt golomb stream: decoded nnz mismatch")
         return (np.zeros(0, np.int64), np.zeros(0, np.int64),
                 np.zeros(0, np.float32))
     _check_bit_len(batch.bit_len, batch.word_count)
     bits = _backend_unpack(backend, batch.words)
-    return _decode_stream_fields(
+    seg, positions, signs = _decode_stream_fields(
         bits, (32 * batch.word_start).astype(np.int64),
         batch.bit_len.astype(np.int64), batch.numel, b)
+    # per-row integrity: every message's decoded codeword count must match
+    # its advertised nnz (same check class as the single-message path)
+    counts = np.bincount(seg, minlength=batch.n_msgs)
+    if np.any(counts != np.asarray(batch.nnz, np.int64)):
+        raise WireDecodeError("corrupt golomb stream: decoded nnz mismatch")
+    return seg, positions, signs
 
 
 def decode_ternary_words(msg: WireMessage, p: float, *,

@@ -1,16 +1,20 @@
 """Federated runtime: environment (Alg. 5 splits), trainers (Alg. 2 loop,
 synchronous + deadline-buffered async + event-driven), client arrival
-simulation, fleet scenarios, pluggable client samplers."""
+simulation, fleet scenarios, fault injection + server hardening, pluggable
+client samplers."""
 
 from .arrivals import Arrival, ArrivalSimulator, LatencyModel
 from .environment import FedEnvironment, split_data, volume_fractions
 from .events import (EventClock, EventDrivenTrainer, EventLoop, EventRecord,
                      simulate_scenario)
+from .faults import (CorruptPayload, FaultModel, ServerKilled, make_fault,
+                     register_fault, registered_faults)
 from .loop import (BufferedFederatedTrainer, FederatedTrainer, TrainerConfig,
                    build_apply_phase, build_encode_phase)
 from .sampling import (ClientSampler, SamplerView, make_sampler,
                        register_sampler, registered_samplers)
-from .scenarios import (Scenario, make_scenario, register_scenario,
+from .scenarios import (ComposedScenario, FlashOutageScenario, Scenario,
+                        make_scenario, register_scenario,
                         registered_scenarios)
 
 __all__ = ["FedEnvironment", "split_data", "volume_fractions",
@@ -19,7 +23,9 @@ __all__ = ["FedEnvironment", "split_data", "volume_fractions",
            "Arrival", "ArrivalSimulator", "LatencyModel",
            "EventClock", "EventLoop", "EventRecord", "EventDrivenTrainer",
            "simulate_scenario",
-           "Scenario", "make_scenario", "register_scenario",
-           "registered_scenarios",
+           "Scenario", "ComposedScenario", "FlashOutageScenario",
+           "make_scenario", "register_scenario", "registered_scenarios",
+           "FaultModel", "ServerKilled", "CorruptPayload", "make_fault",
+           "register_fault", "registered_faults",
            "ClientSampler", "SamplerView", "make_sampler", "register_sampler",
            "registered_samplers"]

@@ -39,6 +39,19 @@ staleness-drops count (the transmission happened), network-lost and
 client-aborted updates bill zero.  ``event_log`` carries one row per
 arrival/drop/lost event; measured wire totals flush into the ledger at each
 aggregation exactly as the synchronous trainer accounts them.
+
+Server hardening (admission control): a registered :mod:`repro.fed.faults`
+model can mangle dispatches (bit flips, truncation, duplicates, stale
+replays, client crashes, a server kill), and the loop defends per event
+BEFORE anything enters the aggregation buffer -- duplicate/replay rejection
+keyed on ``(client, dispatch_version)``, then the staleness screen, then
+payload validation (a typed ``WireDecodeError`` quarantines the message).
+Rejected arrivals follow the honest-ledger rule: their bytes reached the
+server, so their upstream bits bill, but they carry ZERO aggregate weight.
+The trainer checkpoints crash-consistently every ``ckpt_every`` served
+events through :mod:`repro.checkpoint` (``save_state``: event clock,
+in-flight buffer, RNG streams, codec/residual states, ledgers, quarantine
+log) and a kill-and-resume run is bit-identical to an uninterrupted one.
 """
 
 from __future__ import annotations
@@ -50,7 +63,12 @@ from typing import List, NamedTuple, Optional, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import restore_state, save_state
+from repro.core.residual import ResidualState
+from repro.core.wire import (ChunkedWireBatch, ChunkedWireMessage,
+                             WireBatch, WireDecodeError, WireMessage)
 from repro.fed.environment import FedEnvironment
+from repro.fed.faults import CorruptPayload, FaultModel, make_fault
 from repro.fed.loop import FederatedTrainer, TrainerConfig
 from repro.fed.sampling import ClientSampler, SamplerView, make_sampler
 from repro.fed.scenarios import Scenario, make_scenario
@@ -107,12 +125,15 @@ class _InFlight(NamedTuple):
     dseq: int           # global dispatch sequence (dispatch order)
     sent_at: float
     sent_version: int   # server model version the client encoded against
+    dversion: int       # per-client dispatch version (the dedup key)
     payload: object
     lost: bool          # network loss / client-side abort: never arrives
 
 
 class EventRecord(NamedTuple):
-    """One served event: ``kind`` is "arrival", "drop" or "lost"."""
+    """One served event: ``kind`` is "arrival", "drop", "lost",
+    "duplicate" (an already-admitted ``(client, dispatch_version)`` key
+    re-delivered) or "quarantine" (payload failed admission validation)."""
 
     kind: str
     t: float
@@ -136,11 +157,24 @@ class EventLoop:
     ``max_staleness`` is dropped at arrival.  Updates flagged lost by the
     scenario occupy their in-flight slot until their would-be arrival time,
     then vanish (the server only learns by timeout).
+
+    Admission control (``step``): a delivered update is rejected as
+    "duplicate" when its ``(client, dispatch_version)`` key was already
+    admitted (duplicate delivery or a stale replay of an admitted
+    dispatch), then screened for staleness, then -- when a ``validator``
+    is installed -- its payload is validated; a ``WireDecodeError`` there
+    quarantines the message (one ``quarantine_log`` row with the typed
+    reason).  ``faults`` is an optional :class:`repro.fed.faults.FaultModel`
+    applied at dispatch time: its per-dispatch decisions come from its own
+    counter-based generator keyed on the dispatch sequence number, so the
+    loop's latency RNG never sees the faults and a ``faults=None`` run is
+    bit-identical to one with the neutral model.
     """
 
     def __init__(self, scenario: Scenario, n_clients: int, *, cohort: int,
                  k_arrivals: int, concurrency: int, max_staleness: int,
-                 seed: int = 0) -> None:
+                 seed: int = 0, faults: Optional[FaultModel] = None,
+                 validator=None) -> None:
         if k_arrivals < 1:
             raise ValueError(f"k_arrivals must be >= 1, got {k_arrivals}")
         if not 1 <= cohort <= n_clients:
@@ -161,15 +195,27 @@ class EventLoop:
         self.clock = EventClock()
         self.rng = np.random.default_rng(seed)          # latency/loss draws
         self.scales = scenario.latency.client_scales(n_clients, seed=seed + 1)
+        self.faults = faults
+        self.validator = validator
         self.version = 0                                # aggregations so far
         self.buffer: List[EventRecord] = []
         self._inflight_n = np.zeros(n_clients, np.int32)
         self.n_inflight = 0
         self._dseq = 0
+        # admission-control state: per-client dispatch version counter, the
+        # set of already-admitted (client, dversion) keys, and each client's
+        # last in-flight record (what a replay fault re-delivers)
+        self._dispatch_count = np.zeros(n_clients, np.int64)
+        self._seen: set = set()
+        self._last_sent: dict = {}
+        self.quarantine_log: List[dict] = []
         self.n_dispatched = 0
         self.n_arrived = 0
         self.n_dropped = 0
         self.n_lost = 0
+        self.n_duplicates = 0
+        self.n_quarantined = 0
+        self.n_injected = 0         # fault-injected extra deliveries
         self.staleness_sum = 0
 
     # ------------------------------------------------------------- driving
@@ -204,16 +250,57 @@ class EventLoop:
         t = self.clock.now
         lats, lost = self.scenario.sample(t, ids, self.scales, self.rng)
         for cid, lat, lo, payload in zip(ids, lats, lost, payloads):
-            self.clock.push(t + float(lat), _InFlight(
-                int(cid), self._dseq, t, self.version, payload, bool(lo)))
+            dv = int(self._dispatch_count[cid])
+            self._dispatch_count[cid] += 1
+            fl = _InFlight(int(cid), self._dseq, t, self.version, dv,
+                           payload, bool(lo))
             self._dseq += 1
+            arrive = t + float(lat)
+            if self.faults is not None:
+                fl, arrive = self._apply_faults(fl, arrive, float(lat))
+            self.clock.push(arrive, fl)
             self._inflight_n[cid] += 1
         self.n_inflight += ids.size
         self.n_dispatched += ids.size
         return lats, lost
 
+    def _apply_faults(self, fl: _InFlight, arrive: float, lat: float):
+        """One dispatch through the fault model's hooks, in fixed order
+        (crash -> corrupt -> duplicate -> replay), all drawing from the
+        model's own per-``dseq`` generator -- the loop's latency RNG is
+        untouched, so the fault-free trace is preserved exactly."""
+        frng = self.faults.rng(fl.dseq)
+        if self.faults.crash(frng):
+            fl = fl._replace(lost=True)
+        if not fl.lost:
+            newp = self.faults.corrupt(fl.payload, frng)
+            if newp is not fl.payload:
+                fl = fl._replace(payload=newp)
+        if self.faults.duplicate(frng) and not fl.lost:
+            # a second copy of the SAME delivery, some extra transit later
+            self._inject(fl, arrive + lat * (1.0 + frng.uniform()))
+        if self.faults.replay(frng):
+            prev = self._last_sent.get(fl.client)
+            if prev is not None:
+                # a stale copy of the client's previous dispatch resurfaces
+                # (even one originally lost: the network kept the bytes)
+                self._inject(prev._replace(lost=False),
+                             arrive + lat * (1.0 + frng.uniform()))
+        self._last_sent[fl.client] = fl     # post-fault: replays re-deliver
+        return fl, arrive                   # what was actually on the wire
+
+    def _inject(self, fl: _InFlight, t: float) -> None:
+        """File one fault-injected extra delivery (full in-flight
+        bookkeeping, but not counted as a dispatch)."""
+        self.clock.push(t, fl)
+        self._inflight_n[fl.client] += 1
+        self.n_inflight += 1
+        self.n_injected += 1
+
     def step(self) -> EventRecord:
-        """Serve the next due event; buffers arrivals, records drops/losses."""
+        """Serve the next due event through the admission pipeline:
+        duplicate/replay rejection, staleness screen, payload validation
+        (quarantine), then the buffer."""
         t, _, f = self.clock.pop()
         self.n_inflight -= 1
         self._inflight_n[f.client] -= 1
@@ -222,10 +309,26 @@ class EventLoop:
             self.n_lost += 1
             return EventRecord("lost", t, f.client, stal, f.dseq, f.sent_at,
                                f.sent_version, None)
+        key = (f.client, f.dversion)
+        if key in self._seen:
+            self.n_duplicates += 1
+            return EventRecord("duplicate", t, f.client, stal, f.dseq,
+                               f.sent_at, f.sent_version, f.payload)
+        self._seen.add(key)     # whatever happens next, this key is spent
         if stal > self.max_staleness:
             self.n_dropped += 1
             return EventRecord("drop", t, f.client, stal, f.dseq, f.sent_at,
                                f.sent_version, f.payload)
+        if self.validator is not None:
+            try:
+                self.validator(f.payload)
+            except WireDecodeError as e:
+                self.n_quarantined += 1
+                self.quarantine_log.append({
+                    "t": t, "client": f.client, "dseq": f.dseq,
+                    "reason": str(e)})
+                return EventRecord("quarantine", t, f.client, stal, f.dseq,
+                                   f.sent_at, f.sent_version, f.payload)
         rec = EventRecord("arrival", t, f.client, stal, f.dseq, f.sent_at,
                           f.sent_version, f.payload)
         self.buffer.append(rec)
@@ -250,21 +353,43 @@ class EventLoop:
         return kept
 
     def stats(self) -> dict:
-        """Counters + rates for scenario smoke stats and dry-run records."""
+        """Counters + rates for scenario smoke stats and dry-run records.
+
+        Every rate is guarded against its zero denominator (a run with no
+        served events, or a quiescent clock, reports 0.0 rates rather than
+        dividing by zero).
+        """
+        def _rate(num, den):
+            return num / den if den > 0 else 0.0
+
         now = self.clock.now
-        served = self.n_arrived + self.n_dropped + self.n_lost
+        served = (self.n_arrived + self.n_dropped + self.n_lost
+                  + self.n_duplicates + self.n_quarantined)
         return {
             "aggregations": self.version,
             "dispatched": self.n_dispatched,
             "arrived": self.n_arrived,
             "dropped": self.n_dropped,
             "lost": self.n_lost,
+            "duplicates": self.n_duplicates,
+            "quarantined": self.n_quarantined,
+            "injected": self.n_injected,
             "pending": self.n_inflight,
             "sim_time": now,
-            "aggs_per_time": self.version / now if now > 0 else 0.0,
-            "drop_rate": (self.n_dropped + self.n_lost) / max(served, 1),
-            "mean_staleness": self.staleness_sum / max(self.n_arrived, 1),
+            "aggs_per_time": _rate(self.version, now),
+            "drop_rate": _rate(self.n_dropped + self.n_lost, served),
+            "duplicate_rate": _rate(self.n_duplicates, served),
+            "quarantine_rate": _rate(self.n_quarantined, served),
+            "mean_staleness": _rate(self.staleness_sum, self.n_arrived),
         }
+
+
+def _placeholder_validator(payload) -> None:
+    """Admission validator for the model-free simulator: its payloads are
+    opaque ``None`` placeholders, so the only detectable corruption is the
+    fault layer's :class:`CorruptPayload` marker."""
+    if isinstance(payload, CorruptPayload):
+        raise WireDecodeError("opaque payload corrupted in transit")
 
 
 def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
@@ -272,20 +397,26 @@ def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
                       concurrency: Optional[int] = None,
                       max_staleness: int = 4, aggregations: int = 8,
                       sampler: Union[str, ClientSampler] = "uniform",
+                      faults: Union[str, FaultModel, None] = None,
                       seed: int = 0) -> dict:
     """Model-free event-loop run of one scenario: pure numpy, no payloads.
 
     Drives :class:`EventLoop` through ``aggregations`` K-arrival triggers
     with placeholder payloads and returns :meth:`EventLoop.stats` -- the
     per-scenario event statistics the dry-run records and the scenario
-    smoke tests read.  Deterministic in ``seed``.
+    smoke tests read.  ``faults`` layers a registered fault model on top
+    (corrupted placeholders quarantine via the CorruptPayload marker).
+    Deterministic in ``seed``.
     """
     scen = make_scenario(scenario) if isinstance(scenario, str) else scenario
     smp = make_sampler(sampler) if isinstance(sampler, str) else sampler
+    fm = make_fault(faults) if isinstance(faults, str) else faults
     k = int(k_arrivals) if k_arrivals else cohort
     conc = int(concurrency) if concurrency else max(k, cohort)
     loop = EventLoop(scen, n_clients, cohort=cohort, k_arrivals=k,
-                     concurrency=conc, max_staleness=max_staleness, seed=seed)
+                     concurrency=conc, max_staleness=max_staleness, seed=seed,
+                     faults=fm,
+                     validator=None if fm is None else _placeholder_validator)
     rng = np.random.default_rng(seed + 7)               # sampler draws
     last_seen = np.zeros(n_clients, np.int64)
     for _ in range(aggregations):
@@ -339,7 +470,9 @@ class EventDrivenTrainer(FederatedTrainer):
                  scenario: Union[str, Scenario] = "steady",
                  sampler: Union[str, ClientSampler] = "uniform",
                  k_arrivals: Optional[int] = None,
-                 concurrency: Optional[int] = None, max_staleness: int = 8):
+                 concurrency: Optional[int] = None, max_staleness: int = 8,
+                 faults: Union[str, FaultModel, None] = None,
+                 ckpt_path: Optional[str] = None, ckpt_every: int = 0):
         super().__init__(model, train, test, env, protocol, tcfg)
         if not self._accepts_mask:
             raise TypeError(
@@ -350,23 +483,32 @@ class EventDrivenTrainer(FederatedTrainer):
                          if isinstance(scenario, str) else scenario)
         self.sampler = (make_sampler(sampler)
                         if isinstance(sampler, str) else sampler)
+        self.faults = make_fault(faults) if isinstance(faults, str) else faults
+        self.ckpt_path = ckpt_path
+        self.ckpt_every = int(ckpt_every)
         p = env.participants_per_round
         self.k_arrivals = int(k_arrivals) if k_arrivals else p
         self.concurrency = (int(concurrency) if concurrency
                             else max(self.k_arrivals, p))
         self.max_staleness = int(max_staleness)
+        self._wire_payloads = self.ingest and self.protocol.wire_format
         self.loop = EventLoop(self.scenario, env.n_clients, cohort=p,
                               k_arrivals=self.k_arrivals,
                               concurrency=self.concurrency,
                               max_staleness=self.max_staleness,
-                              seed=tcfg.seed + 2)
-        self._wire_payloads = self.ingest and self.protocol.wire_format
+                              seed=tcfg.seed + 2, faults=self.faults,
+                              validator=self._validate_payload)
         self.n_dropped = 0
         self.n_lost = 0
+        self.n_events_served = 0
         self.event_log: list[dict] = []
         self.agg_log: list[dict] = []
         self._billed: list[EventRecord] = []    # reached server, unledgered
         self._pending_down: list[np.ndarray] = []   # cohorts since last agg
+        # rejected (duplicate/quarantined) arrivals: bits bill at the next
+        # flush, but their payloads never join the aggregation buffer
+        self._rejected_bits = 0.0
+        self._rejected_n = 0
 
     # ----------------------------------------------------------- event side
     def _dispatch_cohort(self) -> None:
@@ -389,6 +531,22 @@ class EventDrivenTrainer(FederatedTrainer):
             "kind": "dispatch", "t": self.loop.clock.now, "version": self.round,
             "clients": int(sel.size), "lost_in_flight": int(lost.sum())})
 
+    def _validate_payload(self, payload) -> None:
+        """Admission validation of one delivered payload; raises
+        :class:`WireDecodeError` on every detectable corruption class."""
+        if isinstance(payload, CorruptPayload):
+            raise WireDecodeError("opaque payload corrupted in transit")
+        if self._wire_payloads:
+            self.protocol.validate_wire(payload, direction="up")
+            return
+        v = np.asarray(payload)
+        if v.size != self.numel:
+            raise WireDecodeError(
+                f"dense payload has {v.size} elements, expected "
+                f"{self.numel}")
+        if not np.all(np.isfinite(v)):
+            raise WireDecodeError("dense payload has non-finite values")
+
     def _record_event(self, ev: EventRecord) -> None:
         proto = self.protocol
         row = {"kind": ev.kind, "t": ev.t, "client": ev.client,
@@ -396,6 +554,19 @@ class EventDrivenTrainer(FederatedTrainer):
         if ev.kind == "lost":
             self.n_lost += 1
             row["bits_up"] = 0.0                # bytes never reached the server
+        elif ev.kind in ("duplicate", "quarantine"):
+            # rejected at admission: the bytes DID reach the server, so the
+            # upstream bits bill -- but the payload never aggregates (and a
+            # corrupt/duplicate stream must not enter the wire log or the
+            # dense re-encode stack), so it is ledgered separately
+            if (self._wire_payloads and self.measure_bits
+                    and not isinstance(ev.payload, CorruptPayload)):
+                bits = float(proto.measured_message_bits(ev.payload))
+            else:
+                bits = proto.upload_bits(self.numel)
+            self._rejected_bits += bits
+            self._rejected_n += 1
+            row["bits_up"] = bits
         else:
             self._billed.append(ev)
             if ev.kind == "drop":
@@ -407,6 +578,18 @@ class EventDrivenTrainer(FederatedTrainer):
                               if self._wire_payloads and self.measure_bits
                               else proto.upload_bits(self.numel))
         self.event_log.append(row)
+
+    def _serve_one(self) -> None:
+        """Serve ONE event: fault-model kill check (BEFORE serving, so the
+        last checkpoint is a consistent boundary), the admission pipeline,
+        then the periodic crash-consistency checkpoint."""
+        if self.faults is not None:
+            self.faults.kill_check(self.n_events_served)
+        self._record_event(self.loop.step())
+        self.n_events_served += 1
+        if (self.ckpt_path and self.ckpt_every
+                and self.n_events_served % self.ckpt_every == 0):
+            self.save_checkpoint(self.ckpt_path)
 
     # ------------------------------------------------------------ round API
     def run_round(self):
@@ -423,7 +606,7 @@ class EventDrivenTrainer(FederatedTrainer):
                 self._dispatch_cohort()
                 cohorts += 1
             else:
-                self._record_event(loop.step())
+                self._serve_one()
         self._aggregate_round()
 
     def advance_to(self, t: float) -> int:
@@ -433,7 +616,7 @@ class EventDrivenTrainer(FederatedTrainer):
         every ledger untouched.  Returns the number of events served."""
         served = 0
         while len(self.loop.clock) and self.loop.clock.peek_time() <= t:
-            self._record_event(self.loop.step())
+            self._serve_one()
             served += 1
             if self.loop.ready():
                 self._aggregate_round()
@@ -476,28 +659,34 @@ class EventDrivenTrainer(FederatedTrainer):
                                                   staleness))
 
         # ---- bit ledger: flush everything that reached the server --------
+        # ``billed`` holds admitted payloads (arrivals + staleness drops);
+        # rejected arrivals (duplicates / quarantined) accumulated their
+        # bits in ``_rejected_bits`` at serve time -- billed here too, but
+        # their payloads never touch the wire log or the dense re-encode
         billed, self._billed = self._billed, []
-        up_analytic = len(billed) * proto.upload_bits(self.numel)
+        rej_bits, self._rejected_bits = self._rejected_bits, 0.0
+        rej_n, self._rejected_n = self._rejected_n, 0
+        up_analytic = (len(billed) + rej_n) * proto.upload_bits(self.numel)
         per_update_analytic = proto.download_bits(self.numel,
                                                   n_participating=p)
         model_bits = 32.0 * self.numel
         if self.measure_bits and billed and self._wire_payloads:
             up = float(sum(proto.measured_message_bits(r.payload)
-                           for r in billed))
+                           for r in billed)) + rej_bits
             down_msg = proto.encode_wire(gd_np, direction="down")
             per_update = proto.measured_message_bits(down_msg)
             self._log_wire_round([r.payload.nnz for r in billed], down_msg,
-                                 up, per_update)
+                                 up - rej_bits, per_update)
         elif self.measure_bits and billed:
             arr = np.stack([np.asarray(r.payload) for r in billed])
             batch = proto.encode_wire_batch(arr, direction="up")
-            up = proto.measured_batch_bits(batch)
+            up = proto.measured_batch_bits(batch) + rej_bits
             down_msg = proto.encode_wire(gd_np, direction="down")
             per_update = proto.measured_message_bits(down_msg)
-            self._log_wire_round(np.asarray(batch.nnz), down_msg, up,
-                                 per_update)
+            self._log_wire_round(np.asarray(batch.nnz), down_msg,
+                                 up - rej_bits, per_update)
         elif self.measure_bits:
-            up = 0.0
+            up = rej_bits
             down_msg = proto.encode_wire(gd_np, direction="down")
             per_update = proto.measured_message_bits(down_msg)
         else:
@@ -518,9 +707,11 @@ class EventDrivenTrainer(FederatedTrainer):
         stats = self.loop.stats()
         self.agg_log.append({
             "agg": self.loop.version, "t": self.loop.clock.now,
-            "aggregated": len(kept), "billed": len(billed),
+            "aggregated": len(kept), "billed": len(billed) + rej_n,
             "staleness_max": int(stal_k.max(initial=0.0)),
             "dropped_total": self.n_dropped, "lost_total": self.n_lost,
+            "quarantined_total": stats["quarantined"],
+            "duplicates_total": stats["duplicates"],
             "pending": stats["pending"],
         })
         self.round += 1
@@ -529,7 +720,95 @@ class EventDrivenTrainer(FederatedTrainer):
         now = self.loop.clock.now
         last = self.agg_log[-1] if self.agg_log else {}
         return {"n_dropped": self.n_dropped, "n_lost": self.n_lost,
+                "n_quarantined": self.loop.n_quarantined,
+                "n_duplicates": self.loop.n_duplicates,
                 "sim_time": now,
                 "aggs_per_time": self.round / now if now > 0 else 0.0,
                 "pending": self.loop.n_inflight,
                 "aggregated": last.get("aggregated", 0)}
+
+    # ------------------------------------------------ crash-consistent resume
+    def save_checkpoint(self, path: str) -> None:
+        """Write EVERY mutable piece of the trainer + event loop (model,
+        per-client states, RNG streams, event clock with its in-flight
+        payloads, admission state, ledgers, logs) so a fresh identically-
+        configured trainer resumes bit-identically mid-round.  Written
+        atomically (tempfile + rename), so a kill DURING the write leaves
+        the previous checkpoint intact."""
+        loop = self.loop
+        save_state(path, {
+            "base": self._base_state(),
+            "loop": {
+                "heap": list(loop.clock._heap),
+                "clock_seq": loop.clock._seq,
+                "now": loop.clock.now,
+                "rng": loop.rng.bit_generator.state,
+                "version": loop.version,
+                "buffer": list(loop.buffer),
+                "inflight_n": loop._inflight_n.copy(),
+                "n_inflight": loop.n_inflight,
+                "dseq": loop._dseq,
+                "dispatch_count": loop._dispatch_count.copy(),
+                "seen": loop._seen,
+                "last_sent": loop._last_sent,
+                "quarantine_log": list(loop.quarantine_log),
+                "counters": [loop.n_dispatched, loop.n_arrived,
+                             loop.n_dropped, loop.n_lost, loop.n_duplicates,
+                             loop.n_quarantined, loop.n_injected,
+                             loop.staleness_sum],
+            },
+            "trainer": {
+                "n_dropped": self.n_dropped,
+                "n_lost": self.n_lost,
+                "n_events_served": self.n_events_served,
+                "event_log": list(self.event_log),
+                "agg_log": list(self.agg_log),
+                "billed": list(self._billed),
+                "pending_down": [np.asarray(s) for s in self._pending_down],
+                "rejected": [self._rejected_bits, self._rejected_n],
+            },
+        })
+
+    def restore_checkpoint(self, path: str) -> None:
+        """Inverse of :meth:`save_checkpoint` into an identically-configured
+        trainer (same model/env/protocol/scenario/sampler/seed; the fault
+        model MAY differ -- resume a killed run with ``faults="none"``)."""
+        st = restore_state(path, classes=_CKPT_CLASSES)
+        self._load_base_state(st["base"])
+        ls = st["loop"]
+        loop = self.loop
+        loop.clock._heap = list(ls["heap"])     # heap order is preserved
+        loop.clock._seq = int(ls["clock_seq"])
+        loop.clock.now = float(ls["now"])
+        loop.rng.bit_generator.state = ls["rng"]
+        loop.version = int(ls["version"])
+        loop.buffer = list(ls["buffer"])
+        loop._inflight_n = np.asarray(ls["inflight_n"], np.int32).copy()
+        loop.n_inflight = int(ls["n_inflight"])
+        loop._dseq = int(ls["dseq"])
+        loop._dispatch_count = np.asarray(ls["dispatch_count"],
+                                          np.int64).copy()
+        loop._seen = set(ls["seen"])
+        loop._last_sent = dict(ls["last_sent"])
+        loop.quarantine_log = list(ls["quarantine_log"])
+        (loop.n_dispatched, loop.n_arrived, loop.n_dropped, loop.n_lost,
+         loop.n_duplicates, loop.n_quarantined, loop.n_injected,
+         loop.staleness_sum) = [int(c) for c in ls["counters"]]
+        tr = st["trainer"]
+        self.n_dropped = int(tr["n_dropped"])
+        self.n_lost = int(tr["n_lost"])
+        self.n_events_served = int(tr["n_events_served"])
+        self.event_log = list(tr["event_log"])
+        self.agg_log = list(tr["agg_log"])
+        self._billed = list(tr["billed"])
+        self._pending_down = [np.asarray(s, np.int64)
+                              for s in tr["pending_down"]]
+        self._rejected_bits = float(tr["rejected"][0])
+        self._rejected_n = int(tr["rejected"][1])
+
+
+# NamedTuple classes the tagged checkpoint codec must be able to rebuild
+# (payloads in the clock/buffer/billed lists, codec residual states).
+_CKPT_CLASSES = {c.__name__: c for c in (
+    _InFlight, EventRecord, WireMessage, WireBatch, ChunkedWireBatch,
+    ChunkedWireMessage, CorruptPayload, ResidualState)}

@@ -1,0 +1,311 @@
+"""Registered fault models: WHAT goes wrong with updates (and the server).
+
+:mod:`repro.fed.scenarios` models when updates arrive; this module models
+what arrives -- and whether the processes at either end survive.  Each fault
+model is a named, seeded generator of per-dispatch failures layered on top
+of any scenario: bit flips in the Golomb word stream, payload truncation,
+duplicate delivery, stale replay of an earlier dispatch, client crashes
+mid-dispatch, and a server kill at a chosen event index.  The event loop
+(:mod:`repro.fed.events`) applies the faults at dispatch time and defends
+against them at admission time (quarantine on :class:`WireDecodeError`,
+duplicate/replay rejection keyed on ``(client, dispatch_version)``).
+
+Determinism contract: every fault decision for the dispatch with global
+sequence number ``dseq`` is drawn from ``rng(dseq)`` -- a counter-based
+generator keyed on ``(salt, model seed, dseq)`` alone.  Faults therefore
+never consume the event loop's latency RNG (a no-fault run is bit-identical
+to a run with ``faults=None``), need no stream state in checkpoints, and any
+scenario x fault combination replays exactly from the seeds.
+
+The registry mirrors ``repro.fed.scenarios``: ``register_fault`` /
+``make_fault(name, **overrides)`` / ``registered_faults()``.  A custom fault
+is a frozen dataclass subclassing :class:`FaultModel` and overriding any of
+the per-dispatch hooks (``crash`` / ``corrupt`` / ``duplicate`` /
+``replay``) or the per-event ``kill_check``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.wire import WireMessage
+
+__all__ = ["FaultModel", "NoFault", "BitFlipFault", "TruncateFault",
+           "DuplicateFault", "ReplayFault", "ClientCrashFault",
+           "ServerKillFault", "ServerKilled", "CorruptPayload",
+           "register_fault", "make_fault", "registered_faults"]
+
+
+class ServerKilled(RuntimeError):
+    """The fault model killed the server process at a chosen event index.
+
+    Raised by :class:`ServerKillFault` BEFORE the event is served, so a
+    checkpoint written at the previous event boundary is consistent; catch
+    it, restore from the checkpoint and continue (see
+    ``EventDrivenTrainer.restore_checkpoint``).
+    """
+
+
+class CorruptPayload(NamedTuple):
+    """Marker wrapping a payload corrupted past structural recognition.
+
+    Used for opaque payloads (the model-free simulator's ``None``
+    placeholders, or message types the byte-level corruptors do not
+    understand) so admission control still sees -- and quarantines -- a
+    deterministic corruption event.
+    """
+
+    original: object
+
+
+_REGISTRY: dict[str, type["FaultModel"]] = {}
+
+# Mixed into every per-dispatch generator key so fault draws can never
+# collide with any other seeded stream in the repo.
+_FAULT_SALT = 0x5EEDFA17
+
+
+def register_fault(cls=None, *, name: Optional[str] = None):
+    """Class decorator adding a fault model to the registry under
+    ``cls.name``."""
+    def _register(c):
+        key = name or getattr(c, "name", None)
+        if not key:
+            raise ValueError(f"fault model {c.__name__} needs a `name`")
+        _REGISTRY[key] = c
+        return c
+    return _register(cls) if cls is not None else _register
+
+
+def registered_faults() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_fault(name: str, **overrides) -> "FaultModel":
+    """Instantiate a registered fault model by name (loud on unknowns)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown fault model {name!r}; registered: "
+                       f"{', '.join(registered_faults())}")
+    return _REGISTRY[name](**overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Base fault model: nothing ever goes wrong (every hook is neutral).
+
+    The event loop calls :meth:`rng` once per dispatched message and feeds
+    the SAME generator through the per-dispatch hooks in a fixed order
+    (``crash`` -> ``corrupt`` -> ``duplicate`` -> ``replay``), so each
+    model's failure pattern is a pure function of ``(seed, dseq)``.
+    ``kill_check(n_served)`` runs once per served event on the trainer side.
+    """
+
+    name = "none"
+    seed: int = 0
+
+    def rng(self, dseq: int) -> np.random.Generator:
+        """The counter-based generator owning dispatch ``dseq``'s draws."""
+        return np.random.default_rng((_FAULT_SALT, self.seed, int(dseq)))
+
+    # -- per-dispatch hooks --------------------------------------------------
+    def crash(self, rng: np.random.Generator) -> bool:
+        """True: the client dies mid-dispatch; the update never arrives."""
+        return False
+
+    def corrupt(self, payload, rng: np.random.Generator):
+        """Return the payload as delivered (possibly mangled in transit)."""
+        return payload
+
+    def duplicate(self, rng: np.random.Generator) -> bool:
+        """True: the network delivers a second copy of this dispatch."""
+        return False
+
+    def replay(self, rng: np.random.Generator) -> bool:
+        """True: a stale copy of the client's PREVIOUS dispatch is
+        re-delivered alongside this one."""
+        return False
+
+    # -- per-event hook (server side) ----------------------------------------
+    def kill_check(self, n_served: int) -> None:
+        """Raise :class:`ServerKilled` to kill the server before serving
+        event index ``n_served``."""
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class NoFault(FaultModel):
+    """The explicit no-op entry: chaos sweeps use it as their baseline row."""
+
+    name = "none"
+
+
+def _corrupt_opaque(payload) -> CorruptPayload:
+    return (payload if isinstance(payload, CorruptPayload)
+            else CorruptPayload(payload))
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class BitFlipFault(FaultModel):
+    """Random bit flips inside the packed word stream (memory/link errors).
+
+    With probability ``prob`` per dispatch, ``n_bits`` uniformly chosen bits
+    of the message's uint32 words are XOR-flipped.  Flips that land in a
+    coded field typically break the Golomb parse (quarantined at admission);
+    flips in the word padding or that yield another VALID stream are
+    semantically undetectable without checksums -- the quarantine rate under
+    this fault is therefore below the injection rate by construction.  Dense
+    ndarray payloads are poisoned with NaNs instead (caught by the trainer's
+    finiteness screen); opaque payloads get the :class:`CorruptPayload`
+    marker.
+    """
+
+    name = "bit-flip"
+    prob: float = 0.3
+    n_bits: int = 4
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(
+                f"BitFlipFault.prob must be in [0, 1], got {self.prob}")
+        if self.n_bits < 1:
+            raise ValueError(
+                f"BitFlipFault.n_bits must be >= 1, got {self.n_bits}")
+
+    def corrupt(self, payload, rng):
+        if rng.random() >= self.prob:
+            return payload
+        if isinstance(payload, WireMessage):
+            words = np.asarray(payload.words)
+            if words.size == 0:
+                # nothing to flip: advertise bits the empty buffer cannot
+                # hold (the _check_bit_len class of corruption)
+                return payload._replace(bit_len=int(payload.bit_len) + 8)
+            w = words.copy()
+            idx = rng.integers(0, w.size, self.n_bits)
+            bit = rng.integers(0, 32, self.n_bits).astype(np.uint32)
+            np.bitwise_xor.at(w, idx, np.uint32(1) << bit)
+            return payload._replace(words=w)
+        if isinstance(payload, np.ndarray):
+            v = np.array(payload, copy=True)
+            idx = rng.integers(0, max(v.size, 1), self.n_bits)
+            v.reshape(-1)[idx[idx < v.size]] = np.nan
+            return v
+        return _corrupt_opaque(payload)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class TruncateFault(FaultModel):
+    """Payload truncation: the tail of the word buffer is cut in transit
+    while the advertised ``bit_len`` still claims the full stream -- the
+    classic partial-read corruption.  Always structurally detectable
+    (``bit_len`` overruns the delivered words), so every truncated payload
+    quarantines."""
+
+    name = "truncate"
+    prob: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(
+                f"TruncateFault.prob must be in [0, 1], got {self.prob}")
+
+    def corrupt(self, payload, rng):
+        if rng.random() >= self.prob:
+            return payload
+        if isinstance(payload, WireMessage):
+            if payload.bit_len == 0:
+                return payload          # nothing on the wire to cut
+            words = np.asarray(payload.words)
+            return payload._replace(words=words[: words.size // 2].copy())
+        if isinstance(payload, np.ndarray):
+            flat = np.asarray(payload).reshape(-1)
+            return np.array(flat[: max(flat.size // 2, 1)], copy=True)
+        return _corrupt_opaque(payload)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class DuplicateFault(FaultModel):
+    """Duplicate delivery: with probability ``prob`` the network delivers a
+    second, later copy of the same dispatch.  Admission control must reject
+    the second copy (same ``(client, dispatch_version)`` key) while still
+    billing its upstream bits."""
+
+    name = "duplicate"
+    prob: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(
+                f"DuplicateFault.prob must be in [0, 1], got {self.prob}")
+
+    def duplicate(self, rng):
+        return bool(rng.random() < self.prob)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class ReplayFault(FaultModel):
+    """Stale replay: with probability ``prob`` a copy of the client's
+    PREVIOUS dispatch (older payload, older model version) is re-delivered.
+    If the original already arrived, the replay is a duplicate by key; if
+    the original was lost, the replay carries genuinely stale data and runs
+    the normal staleness screen."""
+
+    name = "replay"
+    prob: float = 0.3
+
+    def replay(self, rng):
+        return bool(rng.random() < self.prob)
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(
+                f"ReplayFault.prob must be in [0, 1], got {self.prob}")
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class ClientCrashFault(FaultModel):
+    """Client crash mid-dispatch: the local step ran (client state advanced,
+    battery drained) but the upload never happens -- indistinguishable from
+    network loss at the server, billed zero bits."""
+
+    name = "client-crash"
+    prob: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(
+                f"ClientCrashFault.prob must be in [0, 1], got {self.prob}")
+
+    def crash(self, rng):
+        return bool(rng.random() < self.prob)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class ServerKillFault(FaultModel):
+    """Kill the server before serving event index ``at_event`` (0-based
+    count of served events).  The trainer raises :class:`ServerKilled` at
+    that boundary; resume from the last checkpoint with ``faults="none"``
+    (or a later ``at_event``) and the run continues bit-identically."""
+
+    name = "server-kill"
+    at_event: int = 40
+
+    def __post_init__(self):
+        if self.at_event < 0:
+            raise ValueError(
+                f"ServerKillFault.at_event must be >= 0, got {self.at_event}")
+
+    def kill_check(self, n_served):
+        if n_served >= self.at_event:
+            raise ServerKilled(
+                f"server killed before event {n_served} "
+                f"(at_event={self.at_event})")

@@ -403,6 +403,49 @@ class FederatedTrainer:
         """Trainer-specific columns appended to every history record."""
         return {}
 
+    # ------------------------------------------------- crash-consistent state
+    def _base_state(self) -> dict:
+        """Every mutable field of the base trainer as a host-side composite
+        (for ``checkpoint.save_state``): params, per-client optimizer + codec
+        states, server codec state, RNG stream, update cache, ledgers, logs.
+        Jitted functions are rebuilt from config on restore, not captured."""
+        return {
+            "round": self.round,
+            "params_vec": np.asarray(self.params_vec),
+            "client_mom": np.asarray(self.client_mom),
+            "client_state": jax.tree.map(np.asarray, self.client_state),
+            "server_state": jax.tree.map(np.asarray, self.server_state),
+            "last_seen": self.last_seen.copy(),
+            "rng": self.rng.bit_generator.state,
+            "cache": {"round": self.cache.round,
+                      "updates": list(self.cache._updates)},  # newest first
+            "bits": [self.bits_up, self.bits_down,
+                     self.bits_up_analytic, self.bits_down_analytic],
+            "wire_log": list(self.wire_log),
+            "history": list(self.history),
+        }
+
+    def _load_base_state(self, st: dict) -> None:
+        """Inverse of :meth:`_base_state` -- restores bit-exact trainer
+        state into an identically-configured instance."""
+        self.round = int(st["round"])
+        self.params_vec = jnp.asarray(st["params_vec"])
+        self.client_mom = jnp.asarray(st["client_mom"])
+        self.client_state = jax.tree.map(jnp.asarray, st["client_state"])
+        self.server_state = jax.tree.map(jnp.asarray, st["server_state"])
+        self.last_seen = np.asarray(st["last_seen"], np.int64).copy()
+        self.rng.bit_generator.state = st["rng"]
+        self.cache = UpdateCache(self.numel, max_rounds=self.cache.max_rounds)
+        self.cache.round = int(st["cache"]["round"])
+        for u in reversed(st["cache"]["updates"]):
+            self.cache._updates.appendleft(np.asarray(u, np.float32))
+        self.cache._cum = None
+        (self.bits_up, self.bits_down,
+         self.bits_up_analytic, self.bits_down_analytic) = \
+            [float(b) for b in st["bits"]]
+        self.wire_log = list(st["wire_log"])
+        self.history = list(st["history"])
+
     def evaluate(self) -> float:
         n = len(self.test.y)
         bs = self.tcfg.eval_batch

@@ -32,6 +32,7 @@ from repro.fed.arrivals import LatencyModel
 __all__ = ["Scenario", "SteadyScenario", "DiurnalScenario",
            "FlashCrowdScenario", "RegionalOutageScenario",
            "StragglerDriftScenario", "AdaptiveDeadlineScenario",
+           "ComposedScenario", "FlashOutageScenario",
            "register_scenario", "make_scenario", "registered_scenarios"]
 
 
@@ -240,3 +241,61 @@ class AdaptiveDeadlineScenario(Scenario):
     def client_deadline(self, ids, scales):
         ids = np.asarray(ids, np.int64)
         return self.factor * scales[ids] * self.latency.mean
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedScenario(Scenario):
+    """Combinator overlaying two scenarios' hooks on ONE fleet.
+
+    Latency effects multiply (a flash crowd during busy hours is slower
+    than either alone); loss probabilities combine as independent drop
+    events (``1 - (1-p_a)(1-p_b)`` -- a literal product would nullify a
+    one-sided outage); deadlines take the elementwise minimum (whichever
+    constraint binds first aborts the upload).  The composed fleet draws
+    latencies from the OUTER ``latency`` model -- the components contribute
+    only their modulation hooks, not their base distributions.
+    """
+
+    name = "composed"
+    a: Scenario = dataclasses.field(default_factory=SteadyScenario)
+    b: Scenario = dataclasses.field(default_factory=SteadyScenario)
+
+    def __post_init__(self):
+        for side, s in (("a", self.a), ("b", self.b)):
+            if not isinstance(s, Scenario):
+                raise TypeError(
+                    f"ComposedScenario.{side} must be a Scenario, "
+                    f"got {type(s).__name__}")
+
+    def latency_scale(self, t):
+        return self.a.latency_scale(t) * self.b.latency_scale(t)
+
+    def client_factors(self, t, ids):
+        return self.a.client_factors(t, ids) * self.b.client_factors(t, ids)
+
+    def loss_prob(self, t, ids):
+        pa = np.asarray(self.a.loss_prob(t, ids), np.float64)
+        pb = np.asarray(self.b.loss_prob(t, ids), np.float64)
+        return 1.0 - (1.0 - pa) * (1.0 - pb)
+
+    def client_deadline(self, ids, scales):
+        da = self.a.client_deadline(ids, scales)
+        db = self.b.client_deadline(ids, scales)
+        if da is None:
+            return db
+        if db is None:
+            return da
+        return np.minimum(np.asarray(da, np.float64),
+                          np.asarray(db, np.float64))
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class FlashOutageScenario(ComposedScenario):
+    """A regional outage DURING a flash crowd (the ROADMAP's compound
+    case): the surge stretches every latency while one rotating region is
+    dark, so stale-but-arrived and lost-forever updates peak together."""
+
+    name = "flash-outage"
+    a: Scenario = dataclasses.field(default_factory=FlashCrowdScenario)
+    b: Scenario = dataclasses.field(default_factory=RegionalOutageScenario)

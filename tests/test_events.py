@@ -206,6 +206,33 @@ class TestEventDrivenTrainer:
         np.testing.assert_array_equal(np.asarray(tr.server_state.residual),
                                       res0)
 
+    def test_advance_to_quiesces_under_lossy_scenario(self, data):
+        """Under heavy loss + chaos, advance_to(T) for large T must drain
+        every in-flight event to a quiescent loop (nothing pending, clock
+        empty) with the conservation ledger intact -- lost updates vanish
+        from the heap without wedging the server."""
+        from repro.fed import make_fault
+
+        train, test = data
+        for faults in (None, make_fault("duplicate", prob=0.8)):
+            tr = EventDrivenTrainer(
+                MODEL_ZOO["logreg"], train, test, _env(), _stc(),
+                TrainerConfig(lr=0.05, seed=0), scenario="regional-outage",
+                k_arrivals=2, concurrency=4, max_staleness=2, faults=faults)
+            for _ in range(3):
+                tr._dispatch_cohort()
+            served = tr.advance_to(1e9)
+            loop = tr.loop
+            assert len(loop.clock) == 0 and loop.n_inflight == 0
+            assert loop.n_dispatched + loop.n_injected == served
+            assert served == (loop.n_arrived + loop.n_dropped + loop.n_lost
+                              + loop.n_duplicates + loop.n_quarantined)
+            # a further advance on the quiescent loop is a no-op
+            assert tr.advance_to(2e9) == 0
+            st = loop.stats()
+            assert 0.0 <= st["drop_rate"] <= 1.0
+            assert 0.0 <= st["duplicate_rate"] <= 1.0
+
     def test_total_loss_scenario_fails_loudly(self, data):
         """A scenario that loses every update must raise, not spin forever."""
 

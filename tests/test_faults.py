@@ -1,0 +1,473 @@
+"""Fault-injection layer + server hardening (repro.fed.faults / events).
+
+The contracts under test:
+
+* every fault decision is a pure function of ``(fault seed, dseq)`` --
+  same seed, same chaos, and a no-fault run is bit-identical to
+  ``faults=None``;
+* admission control rejects duplicates/replays by ``(client,
+  dispatch_version)`` and quarantines corrupt payloads with a typed
+  ``WireDecodeError``, billing their upstream bits but giving them ZERO
+  aggregate weight (the honest-ledger rule);
+* random byte-level mutation of a valid wire payload NEVER escapes the
+  decoder as silent garbage or a non-``WireDecodeError`` exception, on
+  the numpy AND kernel backends alike;
+* a server kill + checkpoint restore resumes bit-identically to an
+  uninterrupted run (params, measured/analytic ledgers, event +
+  quarantine logs) for stc and signsgd;
+* the optional ``norm_bound`` screen clips/rejects outliers identically
+  on the jitted combine and the streaming ingest paths.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import make_protocol
+from repro.core import wire
+from repro.core.wire import WireDecodeError
+from repro.data import make_classification
+from repro.fed import (EventDrivenTrainer, EventLoop, FedEnvironment,
+                       LatencyModel, ServerKilled, TrainerConfig, make_fault,
+                       registered_faults, simulate_scenario)
+from repro.fed.faults import BitFlipFault, CorruptPayload, DuplicateFault
+from repro.fed.scenarios import (ComposedScenario, FlashCrowdScenario,
+                                 RegionalOutageScenario, SteadyScenario,
+                                 make_scenario)
+from repro.models.paper_models import MODEL_ZOO
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=900, n_test=240)
+
+
+def _env(n_clients=8, participation=0.25):
+    return FedEnvironment(n_clients=n_clients, participation=participation,
+                          classes_per_client=2, batch_size=10)
+
+
+def _trainer(data, protocol="stc", *, ingest=True, faults=None, **kw):
+    train, test = data
+    proto = (make_protocol("stc", sparsity_up=1 / 20, sparsity_down=1 / 20)
+             if protocol == "stc" else make_protocol(protocol))
+    return EventDrivenTrainer(
+        MODEL_ZOO["logreg"], train, test, _env(), proto,
+        TrainerConfig(seed=0, ingest=ingest), scenario="flash-outage",
+        k_arrivals=2, concurrency=4, max_staleness=3, faults=faults, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fault registry + per-class determinism
+# ---------------------------------------------------------------------------
+
+
+class TestFaultRegistry:
+    def test_all_classes_registered(self):
+        assert set(registered_faults()) >= {
+            "none", "bit-flip", "truncate", "duplicate", "replay",
+            "client-crash", "server-kill"}
+
+    def test_unknown_fault_is_loud(self):
+        with pytest.raises(KeyError, match="unknown fault"):
+            make_fault("nope")
+
+    def test_typed_validation(self):
+        with pytest.raises(ValueError, match="prob"):
+            make_fault("bit-flip", prob=1.5)
+        with pytest.raises(ValueError, match="n_bits"):
+            make_fault("bit-flip", n_bits=0)
+        with pytest.raises(ValueError, match="at_event"):
+            make_fault("server-kill", at_event=-1)
+
+    def test_decisions_deterministic_in_seed_and_dseq(self):
+        fm = make_fault("client-crash", prob=0.5, seed=9)
+        a = [fm.crash(fm.rng(d)) for d in range(64)]
+        b = [fm.crash(fm.rng(d)) for d in range(64)]
+        assert a == b and any(a) and not all(a)
+        # a different model seed gives a different failure pattern
+        c = [make_fault("client-crash", prob=0.5, seed=10).crash(
+            make_fault("client-crash", prob=0.5, seed=10).rng(d))
+            for d in range(64)]
+        assert a != c
+
+    @pytest.mark.parametrize("fault", sorted(registered_faults()))
+    def test_every_fault_simulates_deterministically(self, fault):
+        """Model-free chaos: every scenario x fault combination replays
+        exactly from the seeds, and event conservation holds with the
+        injected (duplicate/replay) deliveries accounted."""
+        kw = dict(n_clients=64, cohort=8, max_staleness=3, aggregations=6,
+                  faults=fault, seed=3)
+        s1 = simulate_scenario("flash-outage", **kw)
+        s2 = simulate_scenario("flash-outage", **kw)
+        assert s1 == s2
+        assert (s1["arrived"] + s1["dropped"] + s1["lost"] + s1["duplicates"]
+                + s1["quarantined"] + s1["pending"]
+                == s1["dispatched"] + s1["injected"])
+
+    def test_no_fault_is_bit_identical_to_none(self):
+        kw = dict(n_clients=32, cohort=4, aggregations=4, seed=1)
+        assert (simulate_scenario("steady", **kw)
+                == simulate_scenario("steady", faults="none", **kw))
+
+    def test_corrupt_hooks_cover_payload_types(self):
+        fm = BitFlipFault(prob=1.0, seed=0)
+        rng = fm.rng(0)
+        msg = wire.encode_ternary_words(
+            np.asarray([0, 1, 0, -1, 0, 0, 1, 0] * 8, np.float32), 1 / 8)
+        assert not np.array_equal(np.asarray(fm.corrupt(msg, fm.rng(0)).words),
+                                  np.asarray(msg.words))
+        dense = fm.corrupt(np.zeros(32, np.float32), rng)
+        assert not np.all(np.isfinite(dense))
+        assert isinstance(fm.corrupt(object(), rng), CorruptPayload)
+
+
+# ---------------------------------------------------------------------------
+# composed scenarios (satellite: outage during a flash crowd)
+# ---------------------------------------------------------------------------
+
+
+class TestComposedScenario:
+    def test_flash_outage_registered_and_composes_hooks(self):
+        s = make_scenario("flash-outage")
+        assert isinstance(s, ComposedScenario)
+        fc, ro = FlashCrowdScenario(), RegionalOutageScenario()
+        t = fc.start + 0.1            # inside the surge window
+        assert s.latency_scale(t) == fc.latency_scale(t) * ro.latency_scale(t)
+        ids = np.arange(16)
+        pa = np.asarray(fc.loss_prob(t, ids))
+        pb = np.asarray(ro.loss_prob(t, ids))
+        np.testing.assert_allclose(np.asarray(s.loss_prob(t, ids)),
+                                   1.0 - (1.0 - pa) * (1.0 - pb))
+
+    def test_loss_union_not_product(self):
+        """A one-sided outage must survive composition with a lossless
+        scenario (a literal product would nullify it)."""
+        s = ComposedScenario(a=SteadyScenario(),
+                             b=RegionalOutageScenario(loss=0.9))
+        ids = np.arange(8)
+        lp = np.asarray(s.loss_prob(0.1, ids))     # inside the outage window
+        assert lp.max() == pytest.approx(0.9)
+
+    def test_typed_validation(self):
+        with pytest.raises(TypeError, match="must be a Scenario"):
+            ComposedScenario(a="steady", b=SteadyScenario())
+
+    def test_deadline_elementwise_min(self):
+        base = make_scenario("adaptive-deadline", factor=2.0)
+        tight = make_scenario("adaptive-deadline", factor=1.0)
+        comp = ComposedScenario(a=base, b=tight)
+        ids, scales = np.arange(4), np.ones(4)
+        np.testing.assert_allclose(
+            comp.client_deadline(ids, scales),
+            np.minimum(base.client_deadline(ids, scales),
+                       tight.client_deadline(ids, scales)))
+        none_side = ComposedScenario(a=SteadyScenario(), b=tight)
+        np.testing.assert_allclose(none_side.client_deadline(ids, scales),
+                                   tight.client_deadline(ids, scales))
+
+
+# ---------------------------------------------------------------------------
+# wire fuzz: corruption never escapes the typed error
+# ---------------------------------------------------------------------------
+
+
+class TestWireFuzz:
+    @pytest.mark.parametrize("backend", ["numpy", "kernel"])
+    def test_mutations_quarantine_or_decode_clean(self, backend):
+        """Random word/field mutations of valid payloads either raise
+        WireDecodeError or decode to a WELL-FORMED field set (sorted
+        unique in-range positions, +/-1 signs, count == nnz) -- never
+        silent garbage, never a different exception type."""
+        rng = np.random.default_rng(0)
+        p = 1 / 16
+        escaped, caught = 0, 0
+        for trial in range(60):
+            n = int(rng.integers(64, 2048))
+            x = np.zeros(n, np.float32)
+            k = max(1, int(n * p))
+            idx = rng.choice(n, size=k, replace=False)
+            x[idx] = rng.choice([-1.0, 1.0], size=k)
+            msg = wire.encode_ternary_words(x, p, backend=backend)
+            words = np.asarray(msg.words).copy()
+            mode = trial % 3
+            if mode == 0 and words.size:          # flip random bits
+                i = rng.integers(0, words.size, 4)
+                words[i] ^= (np.uint32(1) << rng.integers(0, 32, 4)
+                             .astype(np.uint32))
+                bad = msg._replace(words=words)
+            elif mode == 1 and words.size:        # truncate the buffer
+                bad = msg._replace(words=words[: words.size // 2])
+            else:                                 # corrupt the side info
+                bad = msg._replace(nnz=int(msg.nnz) + int(rng.integers(1, 5)))
+            try:
+                pos, signs = wire.decode_ternary_fields(bad, p,
+                                                        backend=backend)
+            except WireDecodeError:
+                caught += 1
+                continue
+            # survived decode: must be fully well-formed
+            escaped += 1
+            assert pos.size == int(bad.nnz)
+            assert np.all((pos >= 0) & (pos < bad.numel))
+            assert np.all(np.diff(pos) > 0)       # sorted, unique
+            assert np.all(np.isin(signs, [-1.0, 1.0]))
+        assert caught > 0          # the fuzzer does reach the typed error
+
+    @pytest.mark.parametrize("backend", ["numpy", "kernel"])
+    def test_corruption_classes_same_typed_error(self, backend):
+        """Truncation, nnz overflow and dangling unary runs raise the SAME
+        typed WireDecodeError on both decode backends."""
+        x = np.zeros(512, np.float32)
+        x[[3, 77, 301]] = 1.0
+        msg = wire.encode_ternary_words(x, 1 / 64, backend=backend)
+        words = np.asarray(msg.words)
+        cases = [
+            msg._replace(words=words[: words.size // 2]),     # truncated
+            msg._replace(nnz=int(msg.nnz) + 3),               # nnz mismatch
+            msg._replace(bit_len=int(msg.bit_len) + 64),      # dangling bits
+        ]
+        for bad in cases:
+            with pytest.raises(WireDecodeError):
+                wire.decode_ternary_fields(bad, 1 / 64, backend=backend)
+
+    def test_sign_plane_validation(self):
+        sp = make_protocol("signsgd")
+        msg = sp.encode_wire(np.ones(100, np.float32))
+        sp.validate_wire(msg)
+        with pytest.raises(WireDecodeError, match="bit_len != numel"):
+            sp.validate_wire(msg._replace(bit_len=64))
+
+
+# ---------------------------------------------------------------------------
+# admission control: duplicates, replays, quarantine accounting
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionControl:
+    def test_duplicate_rejected_by_dispatch_version(self):
+        """With certain duplication every key is admitted at most once."""
+        loop = EventLoop(SteadyScenario(), 16, cohort=4, k_arrivals=4,
+                         concurrency=16, max_staleness=8, seed=0,
+                         faults=DuplicateFault(prob=1.0, seed=0))
+        rng = np.random.default_rng(1)
+        for _ in range(4):
+            loop.dispatch(rng.choice(16, size=4, replace=False))
+        admitted = set()
+        while len(loop.clock):
+            ev = loop.step()
+            if ev.kind in ("arrival", "drop"):
+                key = None
+                for rec in [ev]:
+                    key = (rec.client, rec.dseq)
+                assert key not in admitted
+                admitted.add(key)
+        assert loop.n_injected == 16 and loop.n_duplicates == 16
+        assert loop.n_arrived + loop.n_dropped == 16
+
+    def test_replay_of_lost_original_is_not_duplicate(self):
+        """A replayed copy of a LOST dispatch is that key's first delivery:
+        it runs the normal staleness screen instead of dedup."""
+        ids = np.arange(8)
+        loop = EventLoop(SteadyScenario(), 8, cohort=8, k_arrivals=64,
+                         concurrency=64, max_staleness=8, seed=0,
+                         faults=make_fault("replay", prob=1.0))
+        loop.dispatch(ids)                       # no previous dispatch yet
+        loop.dispatch(ids)                       # replays copy dispatch #1
+        while len(loop.clock):
+            loop.step()
+        # 16 dispatched + up to 8 injected replays, every one served
+        assert loop.n_injected == 8
+        assert (loop.n_arrived + loop.n_dropped + loop.n_lost
+                + loop.n_duplicates == 24)
+        assert loop.n_duplicates == 8            # originals all arrived first
+
+    def test_quarantine_bills_bits_but_never_aggregates(self, data):
+        """The honest-ledger rule end to end: every quarantined event bills
+        positive upstream bits, the total ledger is exactly the per-event
+        sum, and quarantined payloads never enter an aggregation."""
+        tr = _trainer(data, faults=make_fault("truncate", prob=0.5))
+        for _ in range(4):
+            tr.run_round()
+        quar = [r for r in tr.event_log if r["kind"] == "quarantine"]
+        assert quar and tr.loop.n_quarantined == len(quar)
+        assert all(r["bits_up"] > 0 for r in quar)
+        assert len(tr.loop.quarantine_log) == len(quar)
+        assert all("corrupt" in q["reason"] or "truncated" in q["reason"]
+                   for q in tr.loop.quarantine_log)
+        # ledger == sum of per-event bills (arrival + drop + quarantine +
+        # duplicate rows; lost rows bill 0)
+        billed = sum(r["bits_up"] for r in tr.event_log
+                     if r["kind"] != "dispatch")
+        assert tr.bits_up == pytest.approx(billed)
+        # aggregations consumed only admitted arrivals
+        assert sum(a["aggregated"] for a in tr.agg_log) == tr.loop.n_arrived
+
+    @pytest.mark.parametrize("fault", sorted(registered_faults()))
+    def test_trainer_survives_every_fault_class(self, data, fault):
+        fm = (make_fault(fault) if fault != "server-kill"
+              else make_fault(fault, at_event=10 ** 9))
+        tr = _trainer(data, faults=fm)
+        for _ in range(3):
+            tr.run_round()
+        assert tr.round == 3
+        assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+
+    def test_dense_mode_quarantines_without_stack_crash(self, data):
+        """Dense (non-ingest) payload path: truncated/NaN payloads must
+        quarantine via the size/finiteness screen, never reach np.stack."""
+        tr = _trainer(data, ingest=False,
+                      faults=make_fault("bit-flip", prob=0.7))
+        for _ in range(3):
+            tr.run_round()
+        assert tr.loop.n_quarantined > 0
+        assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+
+
+# ---------------------------------------------------------------------------
+# kill + crash-consistent resume
+# ---------------------------------------------------------------------------
+
+
+class TestKillAndResume:
+    @pytest.mark.parametrize("protocol", ["stc", "signsgd"])
+    def test_kill_and_resume_bit_identical(self, data, protocol, tmp_path):
+        ck = str(tmp_path / f"{protocol}.ck")
+        ref = _trainer(data, protocol, faults="none")
+        for _ in range(4):
+            ref.run_round()
+
+        killed = _trainer(data, protocol,
+                          faults=make_fault("server-kill", at_event=9),
+                          ckpt_path=ck, ckpt_every=2)
+        with pytest.raises(ServerKilled, match="at_event=9"):
+            while killed.round < 4:
+                killed.run_round()
+
+        resumed = _trainer(data, protocol, faults="none")
+        resumed.restore_checkpoint(ck)
+        assert resumed.n_events_served in (8, 9)   # a pre-kill boundary
+        while resumed.round < 4:
+            resumed.run_round()
+
+        np.testing.assert_array_equal(np.asarray(ref.params_vec),
+                                      np.asarray(resumed.params_vec))
+        assert (ref.bits_up, ref.bits_down, ref.bits_up_analytic,
+                ref.bits_down_analytic) == (
+            resumed.bits_up, resumed.bits_down, resumed.bits_up_analytic,
+            resumed.bits_down_analytic)
+        assert ref.event_log == resumed.event_log
+        assert ref.agg_log == resumed.agg_log
+        assert ref.wire_log == resumed.wire_log
+        assert ref.loop.quarantine_log == resumed.loop.quarantine_log
+        assert ref.loop.stats() == resumed.loop.stats()
+
+    def test_checkpoint_roundtrip_mid_chaos(self, data, tmp_path):
+        """Checkpoint/restore under an ACTIVE corruption fault preserves the
+        quarantine log and admission state exactly."""
+        ck = str(tmp_path / "chaos.ck")
+        fm = make_fault("truncate", prob=0.5)
+        a = _trainer(data, faults=fm)
+        for _ in range(2):
+            a.run_round()
+        a.save_checkpoint(ck)
+        for _ in range(2):
+            a.run_round()
+
+        b = _trainer(data, faults=fm)
+        b.restore_checkpoint(ck)
+        for _ in range(2):
+            b.run_round()
+        np.testing.assert_array_equal(np.asarray(a.params_vec),
+                                      np.asarray(b.params_vec))
+        assert a.loop.quarantine_log == b.loop.quarantine_log
+        assert a.loop.stats() == b.loop.stats()
+        assert a.event_log == b.event_log
+
+
+# ---------------------------------------------------------------------------
+# norm-bound screening (Codec.aggregate / ingest hardening hook)
+# ---------------------------------------------------------------------------
+
+
+class TestNormScreening:
+    def test_policy_validation(self):
+        with pytest.raises(ValueError, match="norm_policy"):
+            make_protocol("stc", norm_bound=1.0, norm_policy="zap")
+        with pytest.raises(ValueError, match="norm_bound"):
+            make_protocol("stc", norm_bound=-1.0)
+
+    def test_clip_and_reject_match_combine_oracle(self):
+        """The streaming ingest screen must agree with the jitted combine
+        screen (same clip scales, same rejections)."""
+        rng = np.random.default_rng(0)
+        numel = 256
+        msgs = np.zeros((4, numel), np.float32)
+        for i, scale in enumerate([0.1, 0.5, 2.0, 8.0]):
+            k = 16
+            idx = rng.choice(numel, size=k, replace=False)
+            msgs[i, idx] = scale * rng.choice([-1.0, 1.0], size=k)
+        bound = float(np.linalg.norm(msgs[1]) * 1.01)   # rows 2,3 exceed it
+        for policy in ("clip", "reject"):
+            proto = make_protocol("ternquant", norm_bound=bound,
+                                  norm_policy=policy)
+            combined = np.asarray(proto.combine(
+                np.asarray(msgs), mask=np.ones(4, np.float32),
+                staleness=np.zeros(4, np.float32)))
+            acc = proto.make_ingest(numel)
+            for row in msgs:
+                proto.ingest_dense(acc, row, 1.0)
+            np.testing.assert_allclose(np.asarray(acc.combined()), combined,
+                                       atol=1e-6)
+            if policy == "reject":
+                assert acc.n_screened == 2
+
+    def test_wire_norm_screen_rejects_outlier_stc(self):
+        """An stc message whose mu*sqrt(nnz) norm exceeds the bound is
+        rejected on the wire ingest path: bits billed, zero weight."""
+        numel, k = 512, 8
+        proto = make_protocol("stc", sparsity_up=k / numel,
+                              norm_bound=0.5, norm_policy="reject")
+        small = np.zeros(numel, np.float32)
+        small[:k] = 0.05 * np.asarray([1, -1] * (k // 2))
+        big = np.zeros(numel, np.float32)
+        big[:k] = 9.0 * np.asarray([1, -1] * (k // 2))
+        acc = proto.make_ingest(numel)
+        proto.ingest_wire(acc, proto.encode_wire(small), 1.0)
+        proto.ingest_wire(acc, proto.encode_wire(big), 1.0)
+        assert acc.n_screened == 1
+        assert acc.weight_mass == pytest.approx(1.0)     # big carries 0
+        assert acc.stream_bits > 0                        # both billed
+        out = np.asarray(acc.combined())
+        assert np.abs(out).max() == pytest.approx(0.05, rel=1e-5)
+
+    def test_screen_off_is_bitwise_inert(self):
+        """norm_bound=None keeps the fast combine path bit-identical."""
+        rng = np.random.default_rng(3)
+        msgs = rng.standard_normal((5, 64)).astype(np.float32)
+        base = make_protocol("stc")
+        assert base.norm_bound is None
+        import jax.numpy as jnp
+        np.testing.assert_array_equal(
+            np.asarray(base.combine(jnp.asarray(msgs))),
+            np.asarray(jnp.mean(jnp.asarray(msgs), axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# stats guards (satellite: zero-division hardening)
+# ---------------------------------------------------------------------------
+
+
+class TestStatsGuards:
+    def test_zero_arrival_stats_are_finite(self):
+        loop = EventLoop(SteadyScenario(), 8, cohort=2, k_arrivals=2,
+                         concurrency=4, max_staleness=1, seed=0)
+        st = loop.stats()
+        assert st["mean_staleness"] == 0.0
+        assert st["drop_rate"] == 0.0
+        assert st["quarantine_rate"] == 0.0
+        assert st["duplicate_rate"] == 0.0
+        assert st["aggs_per_time"] == 0.0
+        assert all(np.isfinite(v) for v in st.values()
+                   if isinstance(v, (int, float)))

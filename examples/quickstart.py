@@ -49,7 +49,7 @@ print(f"bitstream: {msg.bit_len} bits measured "
 # --- 4. error feedback: nothing is ever lost ---------------------------------
 proto = make_protocol("stc", sparsity_up=p, sparsity_down=p)
 state = proto.init_client_state(update.size)
-msg, state, _ = proto.client_compress(update, state)
+msg, state, _ = proto.encode(update, state)
 recon = msg + state.residual
 assert np.allclose(np.asarray(recon), np.asarray(update), rtol=1e-5)
 print("error feedback: msg + residual == update (exact)")

@@ -30,7 +30,8 @@ DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json",
                  "benchmarks/BENCH_chunked.json",
                  "benchmarks/BENCH_ingest.json",
                  "benchmarks/BENCH_events.json",
-                 "benchmarks/BENCH_faults.json")
+                 "benchmarks/BENCH_faults.json",
+                 "benchmarks/BENCH_robust.json")
 
 
 def row_value(row: dict):

@@ -49,4 +49,7 @@ python -m benchmarks.events_bench --smoke
 stage faults-smoke
 python -m benchmarks.faults_bench --smoke
 
+stage robust-smoke
+python -m benchmarks.robust_bench --smoke
+
 stage done

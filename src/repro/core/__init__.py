@@ -6,6 +6,8 @@ Public API:
     golomb       -- Eq. 15-17 entropy models + per-bit oracle bitstream codec
     wire         -- vectorized/batched wire-format packer (measured bits)
     protocols    -- Protocol objects: baseline / fedavg / signsgd / topk / stc
+    aggregation  -- pluggable server combine rules: mean / median / trimmed
+    registry     -- shared name→class resolution for every registry
     chunking     -- ChunkSpec + chunk_codec: per-(layer, chunk) block codecs
     ingest       -- fused decode→aggregate server accumulators (O(numel))
     caching      -- server partial-sum cache P^(s) for partial participation
@@ -56,6 +58,17 @@ from .wire import (
     unpack_sign_words,
 )
 from .ingest import IngestAccumulator
+from .aggregation import (
+    AggregationRule,
+    CoordinateMedianRule,
+    MeanRule,
+    NormScreenedMeanRule,
+    TrimmedMeanRule,
+    get_rule_class,
+    make_rule,
+    register_rule,
+    registered_rules,
+)
 from .protocols import (
     PROTOCOLS,
     Codec,
@@ -100,6 +113,9 @@ __all__ = [
     "decode_ternary_fields_batch", "pack_sign_words", "unpack_sign_words",
     "sign_plane_bits", "get_wire_backend", "register_wire_backend",
     "IngestAccumulator",
+    "AggregationRule", "MeanRule", "NormScreenedMeanRule",
+    "CoordinateMedianRule", "TrimmedMeanRule", "make_rule", "register_rule",
+    "registered_rules", "get_rule_class",
     "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
     "registered_protocols", "get_protocol_class",
     "ChunkSpec", "ChunkedCodec", "chunk_codec", "chunk_spec_from_sizes",

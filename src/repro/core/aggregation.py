@@ -1,0 +1,304 @@
+"""Pluggable server-side aggregation rules (the combine estimator).
+
+``Codec.combine`` used to hard-code one estimator: the
+``participation_weights``-weighted mean.  That mean is statistically
+optimal for honest clients but has a breakdown point of zero -- a single
+client sending a perfectly *valid* sign-flipped or 100x-scaled update
+drags the global model arbitrarily far (Blanchard et al. 2017).  This
+module makes the estimator a registered, frozen-dataclass
+:class:`AggregationRule` that every codec threads through ``combine`` /
+``aggregate`` / ``tree_reduce`` / the fused ingest path:
+
+=====================  ==========  =========  =================================
+rule                   streaming   screens    estimator
+=====================  ==========  =========  =================================
+``mean``               yes         no         weighted mean (bit-identical to
+                                              the pre-rule combine; default)
+``norm_screened_mean`` yes         yes        weighted mean after the PR-8
+                                              norm clip/reject screen
+``coordinate_median``  no          no         coordinate-wise weighted median
+                                              (Yin et al. 2018); breakdown
+                                              point 1/2 of the weight mass
+``trimmed_mean``       no          no         coordinate-wise beta-trimmed
+                                              weighted mean; breakdown point
+                                              beta
+=====================  ==========  =========  =================================
+
+``supports_streaming`` declares whether the rule factors into a running
+per-message sum (so the O(numel) :class:`~repro.core.ingest.IngestAccumulator`
+applies); median and trimmed mean need every client's coordinates
+simultaneously, so trainers asked for ``ingest=True`` with those rules
+loudly fall back to the dense combine (the bit ledgers are unaffected --
+they bill the wire, not the server's working set).
+
+Weighted semantics, shared by every rule: each message row carries the
+weight ``participation_weights(mask, staleness)`` gives it.  A rule must
+be invariant to permuting (row, weight) pairs together and to inserting
+rows of zero weight -- that contract is property-tested for every
+registered rule in ``tests/test_aggregation.py``.
+
+Registering a custom rule::
+
+    @register_rule
+    @dataclasses.dataclass(frozen=True)
+    class KrumLiteRule(AggregationRule):
+        name = "krum-lite"
+        def combine_weighted(self, msgs, weights):
+            flat = msgs.reshape(msgs.shape[0], -1)
+            d = jnp.sum((flat[:, None] - flat[None]) ** 2, axis=-1)
+            score = jnp.sum(jnp.sort(d, axis=1)[:, 1:-1], axis=1)
+            return msgs[jnp.argmin(score)]
+
+    make_protocol("stc", rule="krum-lite")
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import registry as _registry
+
+__all__ = [
+    "AggregationRule",
+    "MeanRule",
+    "NormScreenedMeanRule",
+    "CoordinateMedianRule",
+    "TrimmedMeanRule",
+    "register_rule",
+    "make_rule",
+    "get_rule_class",
+    "registered_rules",
+]
+
+_REGISTRY: dict = {}
+
+
+def register_rule(cls=None, *, name: Optional[str] = None,
+                  override: bool = False):
+    """Class decorator adding an :class:`AggregationRule` to the registry."""
+
+    def _register(cls):
+        key = name or cls.name
+        if not key:
+            raise ValueError(f"rule class {cls.__name__} has no name")
+        if key in _REGISTRY and not override:
+            raise ValueError(f"aggregation rule {key!r} already registered")
+        _REGISTRY[key] = cls
+        return cls
+
+    return _register(cls) if cls is not None else _register
+
+
+def get_rule_class(name: str) -> type:
+    return _registry.lookup("aggregation rule", name, _REGISTRY)
+
+
+def make_rule(rule, **overrides) -> "AggregationRule":
+    """Resolve a registered name (plus field overrides) or pass an
+    :class:`AggregationRule` instance through untouched."""
+    return _registry.resolve("aggregation rule", rule, _REGISTRY,
+                             AggregationRule, **overrides)
+
+
+def registered_rules() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationRule:
+    """Base class: a frozen (hashable, jit-closure-safe) combine estimator.
+
+    Subclasses implement :meth:`combine_weighted`; screening rules
+    additionally override :meth:`screen` (batched, used by ``combine``)
+    and :meth:`screen_weight` (per-message host-side twin, used by the
+    streaming ingest path).
+    """
+
+    name: ClassVar[str] = ""
+    #: the rule factors into a running per-message accumulation, so the
+    #: O(numel) fused-ingest path (`core/ingest.py`) can apply it without
+    #: materializing the (clients, numel) matrix
+    supports_streaming: ClassVar[bool] = False
+    #: the rule screens individual messages (per-message weight rescale /
+    #: rejection) before combining -- the ingest path then routes every
+    #: message through :meth:`screen_weight`
+    screens: ClassVar[bool] = False
+
+    # -- hooks -----------------------------------------------------------
+    def screen(self, msgs, weights):
+        """Batched pre-combine screen: ``(msgs, weights) -> (msgs, weights)``.
+
+        ``weights`` may be None (the unweighted fast path); a screen that
+        rejects messages must then *introduce* a weight vector.  The base
+        rule screens nothing.
+        """
+        return msgs, weights
+
+    def screen_weight(self, norm: float) -> Tuple[float, bool]:
+        """Host-side per-message twin of :meth:`screen` for the streaming
+        ingest path: maps a message's L2 norm to
+        ``(weight_scale, rejected)``."""
+        return 1.0, False
+
+    def combine_weighted(self, msgs, weights):
+        """Combine ``msgs`` (clients-first stacked array) under per-row
+        ``weights``; ``weights is None`` means the plain unweighted round
+        (every row fully present, no staleness)."""
+        raise NotImplementedError
+
+    # -- public entry ----------------------------------------------------
+    def combine(self, msgs, weights=None):
+        """Screen, then combine.  ``Codec.combine`` inlines the same two
+        steps with ``participation_weights`` in between; this entry serves
+        the gathered tree path and direct (test / bench) callers."""
+        msgs, weights = self.screen(msgs, weights)
+        return self.combine_weighted(msgs, weights)
+
+
+@register_rule
+@dataclasses.dataclass(frozen=True)
+class MeanRule(AggregationRule):
+    """The participation-weighted mean -- bit-identical to the pre-rule
+    ``Codec.combine`` in both its branches, and the registry default."""
+
+    name: ClassVar[str] = "mean"
+    supports_streaming: ClassVar[bool] = True
+
+    def combine_weighted(self, msgs, weights):
+        if weights is None:
+            return jnp.mean(msgs, axis=0)
+        total = jnp.sum(weights)
+        denom = jnp.where(total > 0, total, 1.0)
+        wb = weights.reshape((msgs.shape[0],) + (1,) * (msgs.ndim - 1))
+        return jnp.sum(msgs * wb, axis=0) / denom
+
+
+@register_rule
+@dataclasses.dataclass(frozen=True)
+class NormScreenedMeanRule(MeanRule):
+    """PR 8's ``norm_bound`` clip/reject screen, as a rule.
+
+    ``clip`` rescales any message with L2 norm above ``bound`` down onto
+    the ball (weight unchanged); ``reject`` zeroes the message's weight
+    entirely.  Both catch *overscaled* updates; a poisoned update of
+    honest magnitude sails through -- that is what the median/trimmed
+    rules are for.
+    """
+
+    name: ClassVar[str] = "norm_screened_mean"
+    screens: ClassVar[bool] = True
+
+    bound: float = 1.0
+    policy: str = "clip"
+
+    def __post_init__(self):
+        if self.policy not in ("clip", "reject"):
+            raise ValueError(
+                f"policy must be 'clip' or 'reject', got {self.policy!r}")
+        if not self.bound > 0.0:
+            raise ValueError(f"bound must be positive, got {self.bound!r}")
+
+    def screen(self, msgs, weights):
+        flat = msgs.reshape(msgs.shape[0], -1)
+        norms = jnp.sqrt(jnp.sum(flat * flat, axis=1))
+        bound = jnp.float32(self.bound)
+        if self.policy == "clip":
+            scale = jnp.minimum(1.0, bound / jnp.maximum(norms, 1e-30))
+            shape = (msgs.shape[0],) + (1,) * (msgs.ndim - 1)
+            return msgs * scale.reshape(shape), weights
+        keep = (norms <= bound).astype(jnp.float32)
+        if weights is None:
+            return msgs, keep
+        return msgs, jnp.asarray(weights, jnp.float32) * keep
+
+    def screen_weight(self, norm: float) -> Tuple[float, bool]:
+        if norm <= self.bound or norm <= 0.0:
+            return 1.0, False
+        if self.policy == "clip":
+            return float(self.bound) / float(norm), False
+        return 0.0, True
+
+
+def _sorted_with_cumweights(msgs, weights):
+    """Common prefix of the order-statistic rules: per-coordinate stable
+    sort of the (clients, numel) matrix with the weight rows carried
+    along, plus inclusive cumulative weights.  Stable sort keeps equal
+    values in input order, so ties cannot break value-level permutation
+    invariance."""
+    flat = msgs.reshape(msgs.shape[0], -1)
+    if weights is None:
+        weights = jnp.ones(msgs.shape[0], flat.dtype)
+    w = jnp.broadcast_to(
+        jnp.asarray(weights, flat.dtype)[:, None], flat.shape)
+    order = jnp.argsort(flat, axis=0, stable=True)
+    xs = jnp.take_along_axis(flat, order, axis=0)
+    ws = jnp.take_along_axis(w, order, axis=0)
+    return xs, ws, jnp.cumsum(ws, axis=0)
+
+
+@register_rule
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedianRule(AggregationRule):
+    """Coordinate-wise weighted median (Yin et al. 2018).
+
+    Per coordinate, the midpoint of the lower and upper weighted medians
+    -- with unit weights and an even client count that is the classic
+    two-middle-values average, matching ``jnp.median``.  Rows of zero
+    weight can never be selected (the cumulative mass does not move at
+    them), which is what makes masked-out clients true no-ops.  The
+    estimator ignores up to half the weight mass being adversarial.
+    """
+
+    name: ClassVar[str] = "coordinate_median"
+
+    def combine_weighted(self, msgs, weights):
+        xs, ws, cw = _sorted_with_cumweights(msgs, weights)
+        total = cw[-1]
+        half = 0.5 * total
+        lo = jnp.argmax(cw >= half[None], axis=0)
+        above = cw[-1][None] - cw + ws  # mass at-or-above each position
+        hi = (xs.shape[0] - 1) - jnp.argmax((above >= half[None])[::-1],
+                                            axis=0)
+        med = 0.5 * (jnp.take_along_axis(xs, lo[None], axis=0)[0] +
+                     jnp.take_along_axis(xs, hi[None], axis=0)[0])
+        med = jnp.where(total > 0, med, jnp.zeros_like(med))
+        return med.reshape(msgs.shape[1:])
+
+
+@register_rule
+@dataclasses.dataclass(frozen=True)
+class TrimmedMeanRule(AggregationRule):
+    """Coordinate-wise beta-trimmed weighted mean (Yin et al. 2018).
+
+    Per coordinate, discard the smallest and largest ``beta`` fractions
+    of the *weight mass* and average what remains; ``beta=0`` reduces to
+    the weighted mean, ``beta -> 0.5`` approaches the median.  Robust to
+    any adversarial fraction below ``beta``.
+    """
+
+    name: ClassVar[str] = "trimmed_mean"
+
+    beta: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.beta < 0.5:
+            raise ValueError(
+                f"beta must lie in [0, 0.5), got {self.beta!r}")
+
+    def combine_weighted(self, msgs, weights):
+        xs, ws, cw = _sorted_with_cumweights(msgs, weights)
+        total = cw[-1]
+        lo = self.beta * total
+        hi = (1.0 - self.beta) * total
+        # effective weight of each sorted entry inside the [lo, hi] mass
+        # window: the overlap of its cumulative-mass interval with it
+        eff = (jnp.clip(cw, lo[None], hi[None]) -
+               jnp.clip(cw - ws, lo[None], hi[None]))
+        span = hi - lo
+        denom = jnp.where(span > 0, span, 1.0)
+        out = jnp.sum(xs * eff, axis=0) / denom
+        out = jnp.where(total > 0, out, jnp.zeros_like(out))
+        return out.reshape(msgs.shape[1:])

@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import inspect
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -517,16 +516,13 @@ def chunk_codec(base: Codec, spec: ChunkSpec,
     ``p_fn(layer_name, depth) -> p | None`` rescales the sparsity of layers
     whose codec declares ``sparsity_up``/``sparsity_down`` (None keeps the
     base value); other codecs ignore the hook.  The wrapper forwards the
-    base codec's trainer-visible knobs (``local_iters``, staleness decay).
+    base codec's trainer-visible knobs (``local_iters``, staleness decay,
+    the aggregation ``rule``).  (Codecs predating the masked aggregate API
+    cannot exist anymore -- ``Codec.__init_subclass__`` rejects them at
+    class-definition time.)
     """
     if isinstance(base, ChunkedCodec):
         raise TypeError("chunk_codec over an already-chunked codec")
-    params = inspect.signature(base.aggregate).parameters
-    if "mask" not in params and not any(
-            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
-        raise TypeError(
-            f"codec {base.name!r} predates the masked aggregate API; "
-            "chunked wrapping needs mask/staleness-aware codecs")
     fields = {f.name for f in dataclasses.fields(type(base))}
     layer_codecs = []
     for depth, lname in enumerate(spec.layer_names):
@@ -540,4 +536,5 @@ def chunk_codec(base: Codec, spec: ChunkSpec,
         layer_codecs.append(c)
     return ChunkedCodec(base=base, spec=spec, layer_codecs=tuple(layer_codecs),
                         local_iters=base.local_iters,
-                        staleness_decay=base.staleness_decay)
+                        staleness_decay=base.staleness_decay,
+                        rule=base.rule)

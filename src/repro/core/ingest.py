@@ -66,8 +66,8 @@ class IngestAccumulator:
         self.stream_bits += float(bits)
 
     def note_screened(self) -> None:
-        """Record one message rejected by the codec's norm-bound screen
-        (``Codec.norm_bound`` with ``norm_policy="reject"``): it was counted
+        """Record one message rejected by a screening aggregation rule
+        (``norm_screened_mean`` with ``policy="reject"``): it was counted
         by :meth:`begin_message` with zero weight -- bits billed, zero
         aggregate contribution."""
         self.n_screened += 1

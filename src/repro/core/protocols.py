@@ -22,10 +22,14 @@ The interface (flat-vector path, used by :class:`repro.fed.FederatedTrainer`):
   aggregation of the stacked ``(P, numel)`` messages plus downstream
   compression; returns ``(global_delta, server_state, stats)``.  ``mask`` is
   a per-message participation mask and ``staleness`` the per-message age in
-  rounds (both ``(P,)``), used by the buffered/async trainer: the codec-level
-  default combines arrived messages with the staleness-decayed weighted mean
-  of :meth:`Codec.combine` (``signsgd`` instead casts a weighted majority
-  vote).  ``mask=None`` (the synchronous trainer) is the plain mean.
+  rounds (both ``(P,)``), used by the buffered/async trainer.  The combine
+  estimator itself is the codec's pluggable ``rule``
+  (:mod:`repro.core.aggregation`): the default ``mean`` rule is the
+  staleness-decayed weighted mean of :meth:`Codec.combine` (``signsgd``
+  then instead casts a weighted majority vote); ``coordinate_median`` /
+  ``trimmed_mean`` / ``norm_screened_mean`` trade statistical efficiency
+  for Byzantine robustness.  ``mask=None`` (the synchronous trainer) is
+  the plain mean.
 * ``upload_bits(numel)`` / ``download_bits(numel, n_participating)`` --
   analytic bit ledger (Eq. 1), host-side floats.
 * ``encode_wire`` / ``decode_wire`` / ``encode_wire_batch`` +
@@ -59,7 +63,9 @@ al., 2020) -- as the proof that third-party codecs are drop-in.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
+import warnings
 from typing import ClassVar, Optional
 
 import jax
@@ -67,7 +73,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import golomb, wire
+from .aggregation import AggregationRule, MeanRule, NormScreenedMeanRule, \
+    make_rule
 from .ingest import IngestAccumulator
+from .registry import lookup as _registry_lookup, resolve as _registry_resolve
 from .compression import (
     CompressionStats,
     get_stc_backend,
@@ -129,11 +138,7 @@ def registered_protocols() -> tuple[str, ...]:
 
 
 def get_protocol_class(name: str) -> type["Codec"]:
-    if name not in _REGISTRY:
-        raise ValueError(
-            f"unknown protocol {name!r}; registered codecs: "
-            f"{registered_protocols()}")
-    return _REGISTRY[name]
+    return _registry_lookup("protocol", name, _REGISTRY)
 
 
 # the pre-registry Protocol dataclass carried EVERY protocol's fields; for
@@ -143,9 +148,10 @@ _LEGACY_FIELDS = frozenset({"sparsity_up", "sparsity_down", "sign_step",
                             "error_feedback", "backend", "local_iters"})
 
 
-def make_protocol(name: str, **overrides) -> "Codec":
-    """Factory with the paper's default hyperparameters (Section VI)."""
-    cls = get_protocol_class(name)
+def _instantiate_protocol(cls: type["Codec"], overrides: dict) -> "Codec":
+    """``make_protocol``'s kwarg handling: declared fields pass through,
+    legacy monolithic-Protocol fields drop silently when inert (loudly when
+    they contradict a ClassVar), anything else is a typo."""
     fields = {f.name for f in dataclasses.fields(cls)}
     kwargs = {}
     for k, v in overrides.items():
@@ -157,12 +163,21 @@ def make_protocol(name: str, **overrides) -> "Codec":
             cur = getattr(cls, k, None)
             if cur is not None and cur != v:
                 raise ValueError(
-                    f"{name!r} fixes {k}={cur!r}; override is not supported")
+                    f"{cls.name!r} fixes {k}={cur!r}; "
+                    f"override is not supported")
         else:
             raise TypeError(
-                f"{name!r} codec has no field {k!r}; declared fields: "
+                f"{cls.name!r} codec has no field {k!r}; declared fields: "
                 f"{sorted(fields)}")
     return cls(**kwargs)
+
+
+def make_protocol(name, **overrides) -> "Codec":
+    """Factory with the paper's default hyperparameters (Section VI).
+    Accepts a registered name (plus field overrides) or an already-built
+    :class:`Codec` instance, which passes through untouched."""
+    return _registry_resolve("protocol", name, _REGISTRY, Codec,
+                             instantiate=_instantiate_protocol, **overrides)
 
 
 # ---------------------------------------------------------------------------
@@ -182,14 +197,15 @@ class Codec:
     # that is s rounds old enters the weighted mean with weight (1+s)^-decay
     # (FedBuff-style polynomial decay; 0.0 = ignore staleness entirely)
     staleness_decay: float = 0.5
-    # optional norm-bound screening of arriving updates (server hardening):
-    # a message whose l2 norm exceeds ``norm_bound`` is either scaled down
-    # to the bound ("clip") or dropped from the aggregate with zero weight
-    # ("reject") -- its bits still bill either way.  ``None`` disables the
-    # screen entirely (the default: no extra norms computed, bit-identical
-    # to the pre-screening aggregate paths).
+    # DEPRECATED norm-bound screen (PR 8): forwarded to
+    # ``rule=norm_screened_mean(bound=, policy=)`` with a DeprecationWarning;
+    # setting them alongside an explicit ``rule`` raises.
     norm_bound: Optional[float] = None
     norm_policy: str = "clip"               # "clip" | "reject"
+    # the server-side combine estimator: a registered AggregationRule name
+    # or instance (see repro.core.aggregation).  ``None`` -> "mean", the
+    # participation-weighted mean, bit-identical to the pre-rule combine.
+    rule: Optional[AggregationRule] = None
 
     def __post_init__(self):
         if self.norm_policy not in ("clip", "reject"):
@@ -199,6 +215,51 @@ class Codec:
         if self.norm_bound is not None and not self.norm_bound > 0.0:
             raise ValueError(
                 f"norm_bound must be > 0 (or None), got {self.norm_bound}")
+        rule = self.rule
+        if self.norm_bound is not None:
+            shim = NormScreenedMeanRule(bound=float(self.norm_bound),
+                                        policy=self.norm_policy)
+            if rule is None:
+                warnings.warn(
+                    "Codec(norm_bound=, norm_policy=) is deprecated; use "
+                    "rule=make_rule('norm_screened_mean', bound=..., "
+                    "policy=...) -- the shim forwards bit-identically for "
+                    "one release", DeprecationWarning, stacklevel=3)
+                rule = shim
+            elif rule != shim:
+                # (an equal rule instance means dataclasses.replace() of an
+                # already-shimmed codec: re-normalizing is not a conflict)
+                raise ValueError(
+                    "norm_bound/norm_policy cannot be combined with an "
+                    "explicit aggregation rule; fold the screen into "
+                    "rule=make_rule('norm_screened_mean', bound=..., "
+                    "policy=...)")
+        object.__setattr__(
+            self, "rule", make_rule(rule if rule is not None else "mean"))
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        # the pre-PR-4 2-arg aggregate/tree_reduce spelling is gone: fail
+        # loudly at class-definition time, naming the migration, instead of
+        # silently mis-aggregating masked rounds at runtime
+        for meth in ("aggregate", "tree_reduce"):
+            fn = cls.__dict__.get(meth)
+            if fn is None or not callable(fn):
+                continue
+            try:
+                params = inspect.signature(fn).parameters
+            except (TypeError, ValueError):
+                continue
+            if any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()):
+                continue
+            if "mask" not in params or "staleness" not in params:
+                raise TypeError(
+                    f"{cls.__name__}.{meth} predates the masked aggregation "
+                    f"API: every codec now implements {meth}(..., mask=None, "
+                    "staleness=None); the legacy 2-arg compatibility path "
+                    "was removed with the AggregationRule redesign (see "
+                    "README 'Migration notes')")
 
     # -- state ------------------------------------------------------------
     def init_client_state(self, numel: int):
@@ -255,36 +316,21 @@ class Codec:
             w = w * decay
         return w
 
-    def _screen_combine(self, msgs: jnp.ndarray, mask):
-        """Apply the norm-bound screen inside :meth:`combine` (jit-safe):
-        "clip" rescales outlier rows to the bound, "reject" zeroes their
-        participation weight via the mask."""
-        flat = msgs.reshape(msgs.shape[0], -1)
-        norms = jnp.sqrt(jnp.sum(flat * flat, axis=1))
-        bound = jnp.float32(self.norm_bound)
-        if self.norm_policy == "clip":
-            scale = jnp.minimum(1.0, bound / jnp.maximum(norms, 1e-30))
-            shape = (msgs.shape[0],) + (1,) * (msgs.ndim - 1)
-            return msgs * scale.reshape(shape), mask
-        keep = (norms <= bound).astype(jnp.float32)
-        mask = keep if mask is None else jnp.asarray(mask, jnp.float32) * keep
-        return msgs, mask
-
     def combine(self, msgs: jnp.ndarray, mask=None, staleness=None):
-        """Combine (P, ...) messages over the client axis: the plain mean when
-        unmasked, otherwise the staleness-weighted mean over the arrived
-        messages (weight mass 0 -- nothing arrived -- combines to zero)."""
-        if self.norm_bound is not None:
-            msgs, mask = self._screen_combine(msgs, mask)
+        """Combine (P, ...) messages over the client axis through the
+        codec's :class:`AggregationRule`: the rule's screen runs on the raw
+        mask (a rejected message loses its weight BEFORE staleness decay),
+        then the rule combines under ``participation_weights``.  With the
+        default ``mean`` rule this is bit-identical to the historical
+        combine -- the plain mean when unmasked, otherwise the
+        staleness-weighted mean (weight mass 0 combines to zero)."""
+        msgs, mask = self.rule.screen(msgs, mask)
         if mask is None and staleness is None:
-            return jnp.mean(msgs, axis=0)
+            return self.rule.combine_weighted(msgs, None)
         if mask is None:
             mask = jnp.ones(msgs.shape[0], jnp.float32)
         w = self.participation_weights(mask, staleness)
-        total = jnp.sum(w)
-        denom = jnp.where(total > 0, total, 1.0)
-        wb = w.reshape((msgs.shape[0],) + (1,) * (msgs.ndim - 1))
-        return jnp.sum(msgs * wb, axis=0) / denom
+        return self.rule.combine_weighted(msgs, w)
 
     def aggregate(self, msgs: jnp.ndarray, server_state, mask=None,
                   staleness=None):
@@ -347,20 +393,10 @@ class Codec:
     def wire_norm(self, msg: wire.WireMessage) -> float:
         """Cheap l2-norm estimate of ONE encoded message, from its wire
         side information alone (no decode) -- the ingest paths' input to
-        the ``norm_bound`` screen."""
+        a screening rule's ``screen_weight``."""
         raise NotImplementedError(
             f"{type(self).__name__} has no wire-norm estimate; norm "
             "screening on the wire ingest path needs wire_norm()")
-
-    def _screen_weight(self, norm: float) -> tuple[float, bool]:
-        """Host-side twin of :meth:`_screen_combine` for the streaming
-        ingest paths: ``(value_scale, rejected)`` for one message of update
-        norm ``norm`` (only called when ``norm_bound`` is set)."""
-        if norm <= self.norm_bound or norm <= 0.0:
-            return 1.0, False
-        if self.norm_policy == "clip":
-            return float(self.norm_bound) / float(norm), False
-        return 0.0, True
 
     def encode_wire_batch(self, msgs: np.ndarray, *,
                           direction: str = "up") -> wire.WireBatch:
@@ -426,15 +462,21 @@ class Codec:
         if not self.supports_ingest:
             raise NotImplementedError(
                 f"{type(self).__name__} has no ingest path")
+        if not self.rule.supports_streaming:
+            raise NotImplementedError(
+                f"aggregation rule {self.rule.name!r} needs every client's "
+                "coordinates at once and cannot stream through "
+                "IngestAccumulator; use the dense aggregate path (trainers "
+                "asked for ingest=True fall back automatically)")
         return IngestAccumulator(numel)
 
     def ingest_dense(self, acc: IngestAccumulator, vec: np.ndarray,
                      weight: float) -> None:
         """One dense (decoded, or never wire-encoded) message into the
         accumulator -- the fused wire paths' bit-exactness oracle."""
-        if self.norm_bound is not None:
+        if self.rule.screens:
             norm = float(np.linalg.norm(np.asarray(vec, np.float64)))
-            scale, rejected = self._screen_weight(norm)
+            scale, rejected = self.rule.screen_weight(norm)
             if rejected:
                 acc.begin_message(0.0)
                 acc.note_screened()
@@ -455,13 +497,13 @@ class Codec:
     def ingest_wire(self, acc: IngestAccumulator, msg, weight: float, *,
                     direction: str = "up") -> None:
         """One arriving wire message: account its weight + measured bits,
-        then scatter its decoded fields into the accumulator.  With
-        ``norm_bound`` set, the message's wire-side norm estimate is
-        screened first -- a rejected message still bills its bits but
-        enters the aggregate with zero weight."""
+        then scatter its decoded fields into the accumulator.  Under a
+        screening rule, the message's wire-side norm estimate is screened
+        first -- a rejected message still bills its bits but enters the
+        aggregate with zero weight."""
         bits = self.measured_message_bits(msg)
-        if self.norm_bound is not None:
-            scale, rejected = self._screen_weight(self.wire_norm(msg))
+        if self.rule.screens:
+            scale, rejected = self.rule.screen_weight(self.wire_norm(msg))
             if rejected:
                 acc.begin_message(0.0, bits=bits)
                 acc.note_screened()
@@ -507,17 +549,39 @@ class Codec:
         """
         return delta, residual, {}
 
+    def _tree_reduce_gather(self, msgs, axes, mask, staleness):
+        """Order-statistic rules need every shard's coordinates at once:
+        all_gather the per-shard message trees plus their weight mass, then
+        run the rule once per leaf.  O(n_shards * numel) on the interconnect
+        where the mean-family psum is O(numel) -- the price of a nonlinear
+        estimator, paid only when such a rule is configured."""
+        rule = self.rule
+        if mask is None:
+            mask = jnp.ones((1,), jnp.float32)
+        w = jnp.sum(self.participation_weights(mask, staleness))
+        if not axes:
+            return jax.tree.map(lambda t: rule.combine(t[None], w[None]),
+                                msgs)
+        ws = jax.lax.all_gather(w, axes)
+        return jax.tree.map(
+            lambda t: rule.combine(jax.lax.all_gather(t, axes), ws), msgs)
+
     def tree_reduce(self, msgs, axes, n_clients: int, mask=None,
                     staleness=None):
         """The one protocol-level collective: combine per-client message trees
-        over the manual mesh axes ``axes`` (mean by default).
+        over the manual mesh axes ``axes``.
 
-        ``mask`` / ``staleness`` are THIS shard's slice of the per-client
-        participation mask and staleness vectors (shape ``(local_clients,)``
-        inside shard_map): a masked-out shard contributes zero weight, so a
-        dropped client no longer stalls or skews the step, and the weighted
-        psum renormalizes by the total arrived weight mass.
+        Mean-family rules reduce via the historical (bit-identical) psum
+        paths below; other rules route through the gathered
+        :meth:`_tree_reduce_gather`.  ``mask`` / ``staleness`` are THIS
+        shard's slice of the per-client participation mask and staleness
+        vectors (shape ``(local_clients,)`` inside shard_map): a masked-out
+        shard contributes zero weight, so a dropped client no longer stalls
+        or skews the step, and the weighted psum renormalizes by the total
+        arrived weight mass.
         """
+        if not isinstance(self.rule, MeanRule):
+            return self._tree_reduce_gather(msgs, axes, mask, staleness)
         if mask is None and staleness is None:
             if axes:
                 return jax.tree.map(
@@ -538,15 +602,6 @@ class Codec:
         """Server-side downstream compression of the combined tree.  Returns
         (global_delta_tree, new_server_residual, metrics)."""
         return combined, residual, {}
-
-    # -- legacy single-vector API (pre-registry spelling) --------------------
-    def client_compress(self, update: jnp.ndarray, state):
-        """Back-compat alias of :meth:`encode`."""
-        return self.encode(update, state)
-
-    def server_aggregate(self, stacked: jnp.ndarray, state):
-        """Back-compat alias of :meth:`aggregate`."""
-        return self.aggregate(stacked, state)
 
 
 # Deprecated alias: `Protocol` was the pre-registry monolithic class.
@@ -656,6 +711,18 @@ class SignSGDCodec(Codec):
         return out, server_state, stats
 
     def aggregate(self, msgs, server_state, mask=None, staleness=None):
+        if not isinstance(self.rule, MeanRule):
+            # order-statistic rules: combine the ±step messages through the
+            # rule, then re-quantize to the sign plane the downstream wire
+            # format requires (a coordinate's median of ±step values lies
+            # in {-step, 0, +step} already)
+            out = self.sign_step * jnp.sign(
+                self.combine(msgs, mask, staleness))
+            _, stats = _identity(out)
+            stats = stats._replace(mu=jnp.asarray(self.sign_step))
+            return out, server_state, stats
+        # mean family: the weighted majority vote (its own robust estimator
+        # over sign planes), bit-identical to the pre-rule aggregate
         weights = None
         if mask is not None or staleness is not None:
             if mask is None:
@@ -678,6 +745,10 @@ class SignSGDCodec(Codec):
         return sign_compress_tree(delta, self.sign_step), residual, {}
 
     def tree_reduce(self, msgs, axes, n_clients, mask=None, staleness=None):
+        if not isinstance(self.rule, MeanRule):
+            # gathered rule over the ±step trees; tree_decode's sign()
+            # re-quantizes the combined tree either way
+            return self._tree_reduce_gather(msgs, axes, mask, staleness)
         if mask is None and staleness is None:
             if axes:
                 return jax.tree.map(
@@ -795,8 +866,10 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
                                    backend=self.wire_backend)
 
     def wire_norm(self, msg):
-        # a ternary message is nnz coordinates of magnitude µ exactly
-        return float(msg.mu) * math.sqrt(max(int(msg.nnz), 0))
+        # a ternary message is nnz coordinates of magnitude |µ| exactly;
+        # abs() matters: a Byzantine sign-flip negates µ on an otherwise
+        # valid stream, and a negative "norm" would sail past the screen
+        return abs(float(msg.mu)) * math.sqrt(max(int(msg.nnz), 0))
 
     def encode_wire_batch(self, msgs, *, direction="up"):
         return wire.encode_ternary_words_batch(
@@ -844,7 +917,7 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
         # multi-segment field decode + one scatter per bounded word block
         # (bitwise the sequential ingest_wire loop: np.add.at applies in
         # element order, and the fields come out message-major)
-        if self.norm_bound is not None:
+        if self.rule.screens:
             # screened rounds take the per-message path: the screen is
             # per-message anyway, and this keeps batch == oracle bitwise
             # (a rejected row must not scatter or count nnz)

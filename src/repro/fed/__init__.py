@@ -7,8 +7,10 @@ from .arrivals import Arrival, ArrivalSimulator, LatencyModel
 from .environment import FedEnvironment, split_data, volume_fractions
 from .events import (EventClock, EventDrivenTrainer, EventLoop, EventRecord,
                      simulate_scenario)
-from .faults import (CorruptPayload, FaultModel, ServerKilled, make_fault,
-                     register_fault, registered_faults)
+from .faults import (ByzantineFault, CollusionFault, CorruptPayload,
+                     FaultModel, ScaleAttackFault, ServerKilled,
+                     SignFlipFault, make_fault, register_fault,
+                     registered_faults)
 from .loop import (BufferedFederatedTrainer, FederatedTrainer, TrainerConfig,
                    build_apply_phase, build_encode_phase)
 from .sampling import (ClientSampler, SamplerView, make_sampler,
@@ -27,5 +29,7 @@ __all__ = ["FedEnvironment", "split_data", "volume_fractions",
            "make_scenario", "register_scenario", "registered_scenarios",
            "FaultModel", "ServerKilled", "CorruptPayload", "make_fault",
            "register_fault", "registered_faults",
+           "ByzantineFault", "SignFlipFault", "ScaleAttackFault",
+           "CollusionFault",
            "ClientSampler", "SamplerView", "make_sampler", "register_sampler",
            "registered_samplers"]

@@ -266,13 +266,19 @@ class EventLoop:
 
     def _apply_faults(self, fl: _InFlight, arrive: float, lat: float):
         """One dispatch through the fault model's hooks, in fixed order
-        (crash -> corrupt -> duplicate -> replay), all drawing from the
-        model's own per-``dseq`` generator -- the loop's latency RNG is
-        untouched, so the fault-free trace is preserved exactly."""
+        (crash -> byzantine -> corrupt -> duplicate -> replay), all drawing
+        from the model's own per-``dseq`` generator -- the loop's latency
+        RNG is untouched, so the fault-free trace is preserved exactly."""
         frng = self.faults.rng(fl.dseq)
         if self.faults.crash(frng):
             fl = fl._replace(lost=True)
         if not fl.lost:
+            # Byzantine rewrite first: the adversary crafts a VALID payload
+            # (it must survive admission), which corruption may then mangle
+            # like any honest bytes on the wire
+            newp = self.faults.byzantine(fl.payload, fl.client, frng)
+            if newp is not fl.payload:
+                fl = fl._replace(payload=newp)
             newp = self.faults.corrupt(fl.payload, frng)
             if newp is not fl.payload:
                 fl = fl._replace(payload=newp)
@@ -408,9 +414,9 @@ def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
     (corrupted placeholders quarantine via the CorruptPayload marker).
     Deterministic in ``seed``.
     """
-    scen = make_scenario(scenario) if isinstance(scenario, str) else scenario
-    smp = make_sampler(sampler) if isinstance(sampler, str) else sampler
-    fm = make_fault(faults) if isinstance(faults, str) else faults
+    scen = make_scenario(scenario)
+    smp = make_sampler(sampler)
+    fm = None if faults is None else make_fault(faults)
     k = int(k_arrivals) if k_arrivals else cohort
     conc = int(concurrency) if concurrency else max(k, cohort)
     loop = EventLoop(scen, n_clients, cohort=cohort, k_arrivals=k,
@@ -474,16 +480,9 @@ class EventDrivenTrainer(FederatedTrainer):
                  faults: Union[str, FaultModel, None] = None,
                  ckpt_path: Optional[str] = None, ckpt_every: int = 0):
         super().__init__(model, train, test, env, protocol, tcfg)
-        if not self._accepts_mask:
-            raise TypeError(
-                f"codec {self.protocol.name!r} overrides aggregate() without "
-                "the mask/staleness parameters; event-driven aggregation "
-                "needs the masked Codec API (see core.protocols.Codec)")
-        self.scenario = (make_scenario(scenario)
-                         if isinstance(scenario, str) else scenario)
-        self.sampler = (make_sampler(sampler)
-                        if isinstance(sampler, str) else sampler)
-        self.faults = make_fault(faults) if isinstance(faults, str) else faults
+        self.scenario = make_scenario(scenario)
+        self.sampler = make_sampler(sampler)
+        self.faults = None if faults is None else make_fault(faults)
         self.ckpt_path = ckpt_path
         self.ckpt_every = int(ckpt_every)
         p = env.participants_per_round

@@ -10,6 +10,12 @@ mid-dispatch, and a server kill at a chosen event index.  The event loop
 against them at admission time (quarantine on :class:`WireDecodeError`,
 duplicate/replay rejection keyed on ``(client, dispatch_version)``).
 
+Byzantine valid-update adversaries (:class:`SignFlipFault`,
+:class:`ScaleAttackFault`, :class:`CollusionFault`) are the complement:
+their payloads pass every admission check BY CONSTRUCTION, so the only
+defense is a robust aggregation rule (:mod:`repro.core.aggregation`) --
+``benchmarks/robust_bench.py`` sweeps exactly that matchup.
+
 Determinism contract: every fault decision for the dispatch with global
 sequence number ``dseq`` is drawn from ``rng(dseq)`` -- a counter-based
 generator keyed on ``(salt, model seed, dseq)`` alone.  Faults therefore
@@ -27,15 +33,20 @@ the per-dispatch hooks (``crash`` / ``corrupt`` / ``duplicate`` /
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.wire import WireMessage
+from repro.core import registry as _registry
+from repro.core.wire import ChunkedWireMessage, WireMessage
+from repro.fed.scenarios import _hash_frac
 
 __all__ = ["FaultModel", "NoFault", "BitFlipFault", "TruncateFault",
            "DuplicateFault", "ReplayFault", "ClientCrashFault",
            "ServerKillFault", "ServerKilled", "CorruptPayload",
+           "ByzantineFault", "SignFlipFault", "ScaleAttackFault",
+           "CollusionFault",
            "register_fault", "make_fault", "registered_faults"]
 
 
@@ -84,12 +95,11 @@ def registered_faults() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def make_fault(name: str, **overrides) -> "FaultModel":
-    """Instantiate a registered fault model by name (loud on unknowns)."""
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown fault model {name!r}; registered: "
-                       f"{', '.join(registered_faults())}")
-    return _REGISTRY[name](**overrides)
+def make_fault(fault, **overrides) -> "FaultModel":
+    """Instantiate a registered fault model by name (loud on unknowns),
+    or pass a :class:`FaultModel` instance through untouched."""
+    return _registry.resolve("fault model", fault, _REGISTRY, FaultModel,
+                             **overrides)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,9 +108,10 @@ class FaultModel:
 
     The event loop calls :meth:`rng` once per dispatched message and feeds
     the SAME generator through the per-dispatch hooks in a fixed order
-    (``crash`` -> ``corrupt`` -> ``duplicate`` -> ``replay``), so each
-    model's failure pattern is a pure function of ``(seed, dseq)``.
-    ``kill_check(n_served)`` runs once per served event on the trainer side.
+    (``crash`` -> ``byzantine`` -> ``corrupt`` -> ``duplicate`` ->
+    ``replay``), so each model's failure pattern is a pure function of
+    ``(seed, dseq)``.  ``kill_check(n_served)`` runs once per served event
+    on the trainer side.
     """
 
     name = "none"
@@ -114,6 +125,16 @@ class FaultModel:
     def crash(self, rng: np.random.Generator) -> bool:
         """True: the client dies mid-dispatch; the update never arrives."""
         return False
+
+    def byzantine(self, payload, client: int, rng: np.random.Generator):
+        """Adversarial VALID-update rewrite: a Byzantine client replaces its
+        honest payload with a poisoned one that still passes every admission
+        check (``validate_wire``, size, finiteness) by construction -- only
+        the aggregation rule can defend.  Runs before :meth:`corrupt` (the
+        adversary crafts the bytes; transit may then mangle them like any
+        honest message).  The base model consumes NO rng draws here, so
+        adding the hook left every existing fault trace bit-identical."""
+        return payload
 
     def corrupt(self, payload, rng: np.random.Generator):
         """Return the payload as delivered (possibly mangled in transit)."""
@@ -309,3 +330,139 @@ class ServerKillFault(FaultModel):
             raise ServerKilled(
                 f"server killed before event {n_served} "
                 f"(at_event={self.at_event})")
+
+
+# ---------------------------------------------------------------------------
+# Byzantine valid-update adversaries: payloads the admission pipeline CANNOT
+# catch (they parse, size-check and finite-check like honest updates); only
+# the aggregation rule (repro.core.aggregation) defends.
+# ---------------------------------------------------------------------------
+
+
+def _rewrite_valid(payload, factor: float):
+    """Multiply an update payload by ``factor`` while keeping it VALID for
+    every admission check -- the shared mechanics of the Byzantine models.
+
+    Dense ndarrays scale directly.  A ternary wire stream (STC / chunked
+    STC) scales through its µ header(s): the Golomb position words are
+    untouched, so the stream still parses, and the decoder multiplies every
+    surviving coordinate by the poisoned µ.  A dense sign plane (signSGD,
+    ``bit_len == numel``) carries no magnitude at all: a negative factor
+    inverts every sign bit (the strongest rewrite the format admits), a
+    positive one is a no-op -- majority-vote formats are scale-immune by
+    construction.  Opaque payloads (the model-free simulator's ``None``
+    placeholders) pass through untouched: there is nothing semantic to
+    poison, and wrapping them would trip quarantine, which a Byzantine
+    client never does."""
+    if isinstance(payload, np.ndarray):
+        return np.asarray(payload, np.float32) * np.float32(factor)
+    if isinstance(payload, WireMessage):
+        if int(payload.bit_len) == int(payload.numel):   # dense sign plane
+            if factor >= 0:
+                return payload
+            return payload._replace(
+                words=np.bitwise_not(np.asarray(payload.words)))
+        return payload._replace(mu=float(payload.mu) * float(factor))
+    if isinstance(payload, ChunkedWireMessage):
+        b = payload.batch
+        flipped = tuple(sb._replace(mu=np.asarray(sb.mu, np.float64)
+                                    * float(factor))
+                        for sb in b.batches)
+        return ChunkedWireMessage(b._replace(batches=flipped))
+    return payload
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineFault(FaultModel):
+    """Base for valid-update adversaries: a deterministic ``fraction`` of
+    the client population is Byzantine, membership hashed from the client
+    id alone (the same Knuth-hash trick as the scenario subpopulations), so
+    WHO is compromised is stable across dispatches, draw order and
+    platforms -- a colluding cohort, not independent coin flips.  Every
+    dispatch from a compromised client is rewritten via :meth:`attack`.
+    Not registered itself: subclasses define the attack."""
+
+    fraction: float = 0.2
+
+    def __post_init__(self):
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(
+                f"{type(self).__name__}.fraction must be in [0, 1], "
+                f"got {self.fraction}")
+
+    def is_byzantine(self, client: int) -> bool:
+        return bool(_hash_frac(np.asarray([client]))[0] < self.fraction)
+
+    def byzantine(self, payload, client, rng):
+        if not self.is_byzantine(client):
+            return payload
+        return self.attack(payload, client, rng)
+
+    def attack(self, payload, client: int, rng: np.random.Generator):
+        raise NotImplementedError(type(self).__name__)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class SignFlipFault(ByzantineFault):
+    """Gradient-reversal attack: compromised clients send ``-scale`` times
+    their honest update.  With ``scale=1`` the payload norm is exactly
+    honest (no norm screen can see it); larger scales amplify the damage
+    but become norm-screenable -- the classic robustness trade-off the
+    robust bench sweeps."""
+
+    name = "sign-flip"
+    scale: float = 1.0
+
+    def attack(self, payload, client, rng):
+        return _rewrite_valid(payload, -self.scale)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class ScaleAttackFault(ByzantineFault):
+    """Overscaling attack: compromised clients send ``factor`` times their
+    honest update -- right direction, poisoned step size.  The cheapest
+    attack to mount and the one ``norm_screened_mean`` exists to stop."""
+
+    name = "scale-attack"
+    factor: float = 100.0
+
+    def attack(self, payload, client, rng):
+        return _rewrite_valid(payload, self.factor)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class CollusionFault(ByzantineFault):
+    """Colluding cohort: every compromised client sends ``scale`` times its
+    honest norm along ONE common poisoned direction (seeded from the model
+    seed, NOT the dispatch counter -- all colluders push the same way, which
+    is what defeats per-message norm screening at ``scale=1`` and shifts a
+    mean by the full colluding weight mass).  Wire-format payloads cannot
+    carry an arbitrary direction without re-encoding through the codec, so
+    there the colluders fall back to the coordinated amplified sign-flip of
+    their own updates (documented approximation; the dense event path
+    mounts the full attack)."""
+
+    name = "collusion"
+    scale: float = 1.0
+
+    def attack(self, payload, client, rng):
+        if isinstance(payload, np.ndarray):
+            v = np.asarray(payload, np.float32).reshape(-1)
+            d = _collusion_direction(self.seed, v.size)
+            out = (np.float32(self.scale)
+                   * np.float32(np.linalg.norm(v))) * d
+            return out.reshape(np.shape(payload))
+        return _rewrite_valid(payload, -self.scale)
+
+
+@functools.lru_cache(maxsize=8)
+def _collusion_direction(seed: int, numel: int) -> np.ndarray:
+    """The colluders' common unit direction -- a pure function of the model
+    seed and payload size (cached: one draw per fleet, not per dispatch)."""
+    g = np.random.default_rng((_FAULT_SALT ^ 0xC0111DE, seed, numel))
+    d = g.standard_normal(numel)
+    n = np.linalg.norm(d)
+    return (d / (n if n > 0 else 1.0)).astype(np.float32)

@@ -46,8 +46,8 @@ Works with any model from ``repro.models.paper_models`` (or any
 from __future__ import annotations
 
 import dataclasses
-import inspect
 import math
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -103,18 +103,6 @@ def _cross_entropy(logits, y):
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
     return jnp.mean(logz - gold)
-
-
-def _codec_accepts_mask(codec: Codec) -> bool:
-    """True when ``codec.aggregate`` takes the mask/staleness kwargs (the
-    masked Codec API); legacy 2-argument overrides still run synchronously."""
-    try:
-        params = inspect.signature(codec.aggregate).parameters
-    except (TypeError, ValueError):  # builtins / C callables: assume legacy
-        return False
-    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
-        return True
-    return "mask" in params and "staleness" in params
 
 
 # ---------------------------------------------------------------------------
@@ -175,20 +163,19 @@ def build_encode_phase(codec: Codec, apply_fn: Callable, spec,
     return jax.jit(encode_fn)
 
 
-def build_apply_phase(codec: Codec, accepts_mask: bool):
+def build_apply_phase(codec: Codec):
     """Server phase: masked staleness-weighted aggregation + downstream
-    compression + the global parameter update, one jit.
+    compression + the global parameter update, one jit.  (Every codec
+    implements the masked signature -- the legacy 2-arg detection path is
+    gone; ``Codec.__init_subclass__`` rejects pre-mask codecs at
+    class-definition time.)
 
     Returns a jitted ``(params_vec, server_state, msgs, mask, staleness) ->
     (new_params_vec, new_server_state, global_delta)``.
     """
     def apply_fn(params_vec, server_state, msgs, mask, staleness):
-        if accepts_mask:
-            global_delta, server_state, _ = codec.aggregate(
-                msgs, server_state, mask=mask, staleness=staleness)
-        else:   # legacy codec (pre-mask API): synchronous mean only
-            global_delta, server_state, _ = codec.aggregate(
-                msgs, server_state)
+        global_delta, server_state, _ = codec.aggregate(
+            msgs, server_state, mask=mask, staleness=staleness)
         return params_vec + global_delta, server_state, global_delta
 
     return jax.jit(apply_fn)
@@ -222,6 +209,17 @@ class FederatedTrainer:
             raise ValueError(
                 f"codec {protocol.name!r} has no ingest path "
                 "(supports_ingest=False); drop TrainerConfig(ingest=True)")
+        if self.ingest and not protocol.rule.supports_streaming:
+            # order-statistic rules need every client's coordinates at
+            # once: the O(numel) streaming accumulator cannot express them,
+            # so the round aggregates dense -- loudly, and ledger-honest
+            # (bits bill the wire either way)
+            warnings.warn(
+                f"aggregation rule {protocol.rule.name!r} cannot stream "
+                "(supports_streaming=False); TrainerConfig(ingest=True) "
+                "falls back to the dense combine for this codec",
+                RuntimeWarning, stacklevel=2)
+            self.ingest = False
 
         self.splits = split_data(train.y, env, seed=tcfg.seed)
         self.rng = np.random.default_rng(tcfg.seed + 1)
@@ -253,7 +251,6 @@ class FederatedTrainer:
         self.wire_log: list[dict] = []   # per-round measured-vs-bound rows
         self.history: list[dict] = []
 
-        self._accepts_mask = _codec_accepts_mask(protocol)
         self._encode_fn = self._build_encode_fn()
         self._apply_fn = self._build_apply_fn()
         self._eval_fn = jax.jit(self._eval_batch)
@@ -264,7 +261,7 @@ class FederatedTrainer:
                                   self.tcfg.lr, self.tcfg.momentum)
 
     def _build_apply_fn(self):
-        return build_apply_phase(self.protocol, self._accepts_mask)
+        return build_apply_phase(self.protocol)
 
     def _eval_batch(self, params_vec, x, y):
         params = unflatten_pytree(params_vec, self.spec)
@@ -510,11 +507,6 @@ class BufferedFederatedTrainer(FederatedTrainer):
                  latency: Optional[LatencyModel] = None,
                  deadline: float = math.inf, max_staleness: int = 8):
         super().__init__(model, train, test, env, protocol, tcfg)
-        if not self._accepts_mask:
-            raise TypeError(
-                f"codec {protocol.name!r} overrides aggregate() without the "
-                "mask/staleness parameters; buffered aggregation needs the "
-                "masked Codec API (see core.protocols.Codec.aggregate)")
         self.deadline = float(deadline)
         self.max_staleness = int(max_staleness)
         self.sim = ArrivalSimulator(latency or LatencyModel(),

@@ -23,6 +23,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.core import registry as _registry
+
 __all__ = ["SamplerView", "ClientSampler", "UniformSampler",
            "StalenessAwareSampler", "register_sampler", "make_sampler",
            "registered_samplers"]
@@ -54,12 +56,11 @@ def registered_samplers() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def make_sampler(name: str, **overrides) -> "ClientSampler":
-    """Instantiate a registered sampler by name (loud on unknown names)."""
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown client sampler {name!r}; registered: "
-                       f"{', '.join(registered_samplers())}")
-    return _REGISTRY[name](**overrides)
+def make_sampler(sampler, **overrides) -> "ClientSampler":
+    """Instantiate a registered sampler by name (loud on unknown names),
+    or pass a :class:`ClientSampler` instance through untouched."""
+    return _registry.resolve("client sampler", sampler, _REGISTRY,
+                             ClientSampler, **overrides)
 
 
 @dataclasses.dataclass(frozen=True)

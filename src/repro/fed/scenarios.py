@@ -27,6 +27,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import registry as _registry
 from repro.fed.arrivals import LatencyModel
 
 __all__ = ["Scenario", "SteadyScenario", "DiurnalScenario",
@@ -54,12 +55,11 @@ def registered_scenarios() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def make_scenario(name: str, **overrides) -> "Scenario":
-    """Instantiate a registered scenario by name (loud on unknown names)."""
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown scenario {name!r}; registered: "
-                       f"{', '.join(registered_scenarios())}")
-    return _REGISTRY[name](**overrides)
+def make_scenario(scenario, **overrides) -> "Scenario":
+    """Instantiate a registered scenario by name (loud on unknown names),
+    or pass a :class:`Scenario` instance through untouched."""
+    return _registry.resolve("scenario", scenario, _REGISTRY, Scenario,
+                             **overrides)
 
 
 def _hash_frac(ids: np.ndarray) -> np.ndarray:

@@ -118,6 +118,9 @@ class TrainConfig:
     measure_wire: bool = False      # also return (msgs, global_delta) trees
                                     # so a host WireLedger can account the
                                     # REAL serialized bits per round
+    rule: Any = None                # server AggregationRule (name or
+                                    # instance, core.aggregation); None =
+                                    # the codec default ("mean")
     masked: bool = False            # async mode: train_step takes per-client
                                     # (mask, staleness) vectors; a masked-out
                                     # client's message gets zero weight in the
@@ -134,7 +137,10 @@ def codec_for(tc: TrainConfig) -> Codec:
     kw = dict(sparsity_up=tc.sparsity_up, sparsity_down=tc.sparsity_down,
               sign_step=tc.sign_step, local_iters=tc.local_iters,
               chunk_size=tc.chunks, p_fn=tc.p_fn)
-    return cls(**{k: v for k, v in kw.items() if k in fields})
+    kw = {k: v for k, v in kw.items() if k in fields}
+    if tc.rule is not None:
+        kw["rule"] = tc.rule
+    return cls(**kw)
 
 
 def init_train_state(cfg: ModelConfig, tc: TrainConfig, n_clients: int, key):
@@ -292,11 +298,8 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig):
                     new_cres, state["client_res"])
             new_state["client_res"] = jax.tree.map(lambda x: x[None], new_cres)
         # ---- upload: the ONLY protocol-level collective --------------------
-        if mask is None and staleness is None:  # legacy tree_reduce overrides
-            combined = codec.tree_reduce(msg, ca, n_clients)
-        else:
-            combined = codec.tree_reduce(msg, ca, n_clients, mask=mask,
-                                         staleness=staleness)
+        combined = codec.tree_reduce(msg, ca, n_clients, mask=mask,
+                                     staleness=staleness)
         global_delta, new_sres, m_down = codec.tree_decode(
             combined, state.get("server_res"), numel=numel, iters=tc.stc_iters)
         if mask is not None:

@@ -1,0 +1,520 @@
+"""The pluggable AggregationRule registry (repro.core.aggregation) and its
+adversarial complement (repro.fed.faults Byzantine valid-update faults).
+
+The load-bearing guarantees:
+
+* ``rule="mean"`` is BIT-IDENTICAL to the historical combine -- params,
+  both ledgers and the wire_log -- across the synchronous, buffered and
+  event-driven trainers, for stc AND signsgd;
+* every registered rule satisfies the combine algebra (permutation
+  invariance, zero-weight-row invariance, masked == compacted);
+* ``coordinate_median`` survives any f < P/2 sign-flipping cohort at the
+  rule level (its breakdown point) while ``mean`` demonstrably does not;
+* the ``Codec(norm_bound=...)`` shim deprecates into
+  ``rule=norm_screened_mean(...)`` with bit-identical behavior;
+* Byzantine faults rewrite payloads that remain VALID wire messages by
+  construction (``validate_wire`` passes after the attack).
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_protocol
+from repro.core.aggregation import (AggregationRule, CoordinateMedianRule,
+                                    MeanRule, NormScreenedMeanRule,
+                                    TrimmedMeanRule, get_rule_class,
+                                    make_rule, register_rule,
+                                    registered_rules)
+from repro.core.registry import resolve
+from repro.data import make_classification
+from repro.fed import (BufferedFederatedTrainer, CollusionFault,
+                       EventDrivenTrainer, FedEnvironment, FederatedTrainer,
+                       LatencyModel, ScaleAttackFault, SignFlipFault,
+                       TrainerConfig, make_fault, make_sampler,
+                       make_scenario)
+from repro.fed.faults import _rewrite_valid
+from repro.fed.scenarios import SteadyScenario
+from repro.models.paper_models import MODEL_ZOO
+
+RULES = registered_rules()
+
+
+def _msgs(p=7, d=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((p, d)), jnp.float32)
+
+
+def _weights(p=7, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.2, 2.0, p), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rule algebra: every registered rule
+# ---------------------------------------------------------------------------
+
+
+class TestRuleAlgebra:
+    @pytest.mark.parametrize("name", RULES)
+    def test_permutation_invariance(self, name):
+        rule, msgs, w = make_rule(name), _msgs(), _weights()
+        perm = np.random.default_rng(2).permutation(msgs.shape[0])
+        np.testing.assert_allclose(
+            np.asarray(rule.combine(msgs[perm], w[perm])),
+            np.asarray(rule.combine(msgs, w)), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("name", RULES)
+    def test_zero_weight_row_is_invisible(self, name):
+        """A weight-0 message must not move the combine -- however wild its
+        contents (the combine-level half of the Byzantine story)."""
+        rule, msgs, w = make_rule(name), _msgs(), _weights()
+        garbage = 1e6 * jnp.ones((1, msgs.shape[1]), jnp.float32)
+        msgs2 = jnp.concatenate([msgs, garbage])
+        w2 = jnp.concatenate([w, jnp.zeros(1, jnp.float32)])
+        np.testing.assert_allclose(np.asarray(rule.combine(msgs2, w2)),
+                                   np.asarray(rule.combine(msgs, w)),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("name", RULES)
+    def test_masked_equals_compacted(self, name):
+        """Codec.combine with a 0/1 mask == combining only the surviving
+        rows -- the contract the buffered/event trainers rely on."""
+        codec = make_protocol("baseline", rule=make_rule(name))
+        msgs = _msgs(p=8)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.float32)
+        kept = msgs[np.flatnonzero(np.asarray(mask))]
+        np.testing.assert_allclose(
+            np.asarray(codec.combine(msgs, mask)),
+            np.asarray(codec.combine(kept, jnp.ones(kept.shape[0]))),
+            rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("name", RULES)
+    def test_staleness_decay_reweights(self, name):
+        """combine(mask, staleness) == combine with the decayed weights
+        folded into the mask: staleness is pure reweighting."""
+        codec = make_protocol("baseline", rule=make_rule(name),
+                              staleness_decay=1.0)
+        msgs = _msgs(p=5)
+        mask = jnp.ones(5, jnp.float32)
+        stale = jnp.asarray([0, 1, 3, 0, 7], jnp.float32)
+        w = np.asarray(codec.participation_weights(mask, stale))
+        np.testing.assert_allclose(
+            np.asarray(codec.combine(msgs, mask, stale)),
+            np.asarray(codec.rule.combine(msgs, jnp.asarray(w))),
+            rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("name", RULES)
+    def test_zero_total_weight_combines_to_zero(self, name):
+        rule = make_rule(name)
+        out = rule.combine(_msgs(p=4), jnp.zeros(4, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.zeros(out.shape, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# rule-specific statistics
+# ---------------------------------------------------------------------------
+
+
+class TestRuleStatistics:
+    @pytest.mark.parametrize("p", [5, 8])
+    def test_median_matches_jnp_at_unit_weights(self, p):
+        msgs = _msgs(p=p)
+        np.testing.assert_allclose(
+            np.asarray(make_rule("coordinate_median").combine(msgs)),
+            np.median(np.asarray(msgs), axis=0), rtol=1e-6, atol=1e-7)
+
+    def test_trimmed_beta0_is_the_weighted_mean(self):
+        msgs, w = _msgs(), _weights()
+        np.testing.assert_allclose(
+            np.asarray(TrimmedMeanRule(beta=0.0).combine(msgs, w)),
+            np.asarray(MeanRule().combine(msgs, w)), rtol=1e-5, atol=1e-6)
+
+    def test_trimmed_clips_an_outlier_mean_does_not(self):
+        msgs = jnp.concatenate([_msgs(p=9), 1e4 * jnp.ones((1, 24))])
+        t = np.asarray(TrimmedMeanRule(beta=0.2).combine(msgs))
+        m = np.asarray(MeanRule().combine(msgs))
+        assert np.max(np.abs(t)) < 10.0 < np.min(np.abs(m))
+
+    @pytest.mark.parametrize("f", [1, 2, 3, 4, 5])
+    def test_median_breakdown_point(self, f):
+        """P=11 messages, f of them sign-flipped at 10x: for every f < P/2
+        the coordinate median stays inside the honest envelope, while the
+        mean's direction flips as soon as 10f > P - f (f >= 2)."""
+        p, d = 11, 16
+        rng = np.random.default_rng(3)
+        honest = 1.0 + 0.1 * rng.standard_normal((p - f, d))
+        byz = -10.0 * (1.0 + 0.1 * rng.standard_normal((f, d)))
+        msgs = jnp.asarray(np.concatenate([honest, byz]), jnp.float32)
+        med = np.asarray(make_rule("coordinate_median").combine(msgs))
+        assert np.all(med >= honest.min(axis=0) - 1e-6)
+        assert np.all(med <= honest.max(axis=0) + 1e-6)
+        assert np.all(med > 0)                       # honest direction
+        mean = np.asarray(MeanRule().combine(msgs))
+        if f >= 2:
+            assert np.all(mean < 0)                  # captured by the cohort
+        else:                # f=1 cancels exactly: dragged to the noise floor
+            assert np.all(mean < 0.5)
+
+    def test_norm_screen_reject_drops_only_oversized(self):
+        msgs = jnp.concatenate([_msgs(p=6), 1e3 * jnp.ones((1, 24))])
+        rule = NormScreenedMeanRule(bound=50.0, policy="reject")
+        np.testing.assert_allclose(
+            np.asarray(rule.combine(msgs)),
+            np.asarray(MeanRule().combine(msgs[:6],
+                                          jnp.ones(6, jnp.float32))),
+            rtol=1e-5, atol=1e-6)
+
+    def test_norm_screen_clip_rescales(self):
+        msgs = 10.0 * jnp.ones((2, 4), jnp.float32)     # norm 20 per row
+        rule = NormScreenedMeanRule(bound=10.0, policy="clip")
+        np.testing.assert_allclose(np.asarray(rule.combine(msgs)),
+                                   5.0 * np.ones((4,)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+
+class TestRuleRegistry:
+    def test_paper_rules_registered(self):
+        for name in ("mean", "coordinate_median", "trimmed_mean",
+                     "norm_screened_mean"):
+            assert name in RULES
+        assert get_rule_class("mean") is MeanRule
+
+    def test_unknown_rule_lists_registered(self):
+        with pytest.raises(KeyError) as ei:
+            make_rule("nope")
+        msg = str(ei.value)
+        assert "unknown aggregation rule 'nope'" in msg
+        for name in RULES:
+            assert name in msg
+
+    def test_instance_passes_through_untouched(self):
+        r = TrimmedMeanRule(beta=0.3)
+        assert make_rule(r) is r
+
+    def test_overrides_on_an_instance_are_loud(self):
+        with pytest.raises(TypeError, match="already-constructed"):
+            make_rule(TrimmedMeanRule(), beta=0.3)
+
+    def test_non_string_non_instance_is_loud(self):
+        with pytest.raises(TypeError, match="aggregation rule"):
+            make_rule(3.14)
+
+    def test_duplicate_registration_is_loud(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_rule
+            @dataclasses.dataclass(frozen=True)
+            class Impostor(AggregationRule):
+                name = "mean"
+
+    def test_every_registry_shares_the_error_shape(self):
+        """Satellite: one resolve() behind every make_* factory -- the
+        KeyError format is identical across protocol / scenario / sampler /
+        fault / rule registries."""
+        for factory, kind in ((make_protocol, "protocol"),
+                              (make_scenario, "scenario"),
+                              (make_sampler, "client sampler"),
+                              (make_fault, "fault model"),
+                              (make_rule, "aggregation rule")):
+            with pytest.raises(KeyError) as ei:
+                factory("definitely-not-registered")
+            assert (f"unknown {kind} 'definitely-not-registered'; "
+                    "registered:") in str(ei.value)
+
+    def test_resolve_instantiates_with_overrides(self):
+        out = resolve("aggregation rule", "trimmed_mean",
+                      {"trimmed_mean": TrimmedMeanRule}, AggregationRule,
+                      beta=0.25)
+        assert out == TrimmedMeanRule(beta=0.25)
+
+    def test_custom_rule_registration_roundtrip(self):
+        from repro.core.aggregation import _REGISTRY
+
+        @register_rule
+        @dataclasses.dataclass(frozen=True)
+        class MidrangeRule(AggregationRule):
+            name = "midrange-test"
+
+            def combine_weighted(self, msgs, weights):
+                return 0.5 * (jnp.max(msgs, axis=0) + jnp.min(msgs, axis=0))
+
+        try:
+            codec = make_protocol("baseline", rule="midrange-test")
+            out = codec.combine(jnp.asarray([[0.0], [1.0], [5.0]]))
+            assert float(out[0]) == pytest.approx(2.5)
+        finally:
+            _REGISTRY.pop("midrange-test", None)
+
+
+# ---------------------------------------------------------------------------
+# mean bit-identity: the api_redesign acceptance bar
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=900, n_test=240)
+
+
+def _env(n_clients=6, participation=0.5):
+    return FedEnvironment(n_clients=n_clients, participation=participation,
+                          classes_per_client=2, batch_size=10)
+
+
+def _proto(name, rule=None):
+    kw = {"stc": dict(sparsity_up=1 / 20, sparsity_down=1 / 20)}.get(name, {})
+    if rule is not None:
+        kw["rule"] = rule
+    return make_protocol(name, **kw)
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.params_vec),
+                                  np.asarray(b.params_vec))
+    assert a.bits_up == b.bits_up and a.bits_down == b.bits_down
+    assert a.bits_up_analytic == b.bits_up_analytic
+    assert a.bits_down_analytic == b.bits_down_analytic
+    assert a.wire_log == b.wire_log
+
+
+class TestMeanBitIdentity:
+    @pytest.mark.parametrize("name", ["stc", "signsgd"])
+    def test_synchronous(self, data, name):
+        train, test = data
+        runs = []
+        for rule in (None, "mean"):
+            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                  _proto(name, rule),
+                                  TrainerConfig(lr=0.05, seed=0))
+            tr.run(3, eval_every=3)
+            runs.append(tr)
+        _assert_identical(*runs)
+
+    @pytest.mark.parametrize("name", ["stc", "signsgd"])
+    def test_buffered(self, data, name):
+        train, test = data
+        runs = []
+        for rule in (None, "mean"):
+            tr = BufferedFederatedTrainer(
+                MODEL_ZOO["logreg"], train, test, _env(), _proto(name, rule),
+                TrainerConfig(lr=0.05, seed=0),
+                latency=LatencyModel(mean=1.0, sigma=0.6), deadline=1.5,
+                max_staleness=3)
+            tr.run(3, eval_every=3)
+            runs.append(tr)
+        _assert_identical(*runs)
+
+    @pytest.mark.parametrize("name", ["stc", "signsgd"])
+    def test_event_driven(self, data, name):
+        train, test = data
+        runs = []
+        for rule in (None, "mean"):
+            tr = EventDrivenTrainer(
+                MODEL_ZOO["logreg"], train, test, _env(), _proto(name, rule),
+                TrainerConfig(lr=0.05, seed=0),
+                scenario=SteadyScenario(latency=LatencyModel(mean=0.7,
+                                                             sigma=0.9)))
+            tr.run(3, eval_every=3)
+            runs.append(tr)
+        _assert_identical(*runs)
+
+
+# ---------------------------------------------------------------------------
+# norm_bound deprecation shim
+# ---------------------------------------------------------------------------
+
+
+class TestNormBoundShim:
+    def test_shim_warns_and_builds_the_rule(self):
+        with pytest.warns(DeprecationWarning, match="norm_screened_mean"):
+            codec = make_protocol("stc", norm_bound=2.0, norm_policy="reject")
+        assert codec.rule == NormScreenedMeanRule(bound=2.0, policy="reject")
+
+    def test_shim_is_bit_identical_to_the_rule(self, data):
+        train, test = data
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = make_protocol("stc", sparsity_up=1 / 20,
+                                sparsity_down=1 / 20, norm_bound=0.5)
+        new = _proto("stc", NormScreenedMeanRule(bound=0.5, policy="clip"))
+        runs = []
+        for proto in (old, new):
+            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                                  proto, TrainerConfig(lr=0.05, seed=0))
+            tr.run(3, eval_every=3)
+            runs.append(tr)
+        _assert_identical(*runs)
+
+    def test_conflicting_shim_and_rule_is_loud(self):
+        with pytest.raises(ValueError, match="norm_bound/norm_policy"):
+            make_protocol("stc", norm_bound=2.0, rule="coordinate_median")
+
+    def test_replace_on_a_shimmed_codec_stays_silent(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            codec = make_protocol("stc", norm_bound=2.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            replaced = dataclasses.replace(codec, sparsity_up=1 / 10)
+        assert replaced.rule == codec.rule
+
+
+# ---------------------------------------------------------------------------
+# streaming declaration
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingFallback:
+    def test_rule_streaming_flags(self):
+        assert MeanRule.supports_streaming
+        assert NormScreenedMeanRule.supports_streaming
+        assert not CoordinateMedianRule.supports_streaming
+        assert not TrimmedMeanRule.supports_streaming
+
+    def test_make_ingest_refuses_non_streaming_rules(self):
+        codec = _proto("stc", "coordinate_median")
+        with pytest.raises(NotImplementedError, match="cannot stream"):
+            codec.make_ingest(100)
+
+    def test_trainer_falls_back_loudly_and_identically(self, data):
+        """ingest=True with a non-streaming rule warns, then trains exactly
+        like the dense combine (the fallback is honest, not lossy)."""
+        train, test = data
+        with pytest.warns(RuntimeWarning, match="cannot stream"):
+            fused = FederatedTrainer(
+                MODEL_ZOO["logreg"], train, test, _env(),
+                _proto("stc", "coordinate_median"),
+                TrainerConfig(lr=0.05, seed=0, ingest=True))
+        assert fused.ingest is False
+        dense = FederatedTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(),
+            _proto("stc", "coordinate_median"),
+            TrainerConfig(lr=0.05, seed=0))
+        fused.run(2, eval_every=2)
+        dense.run(2, eval_every=2)
+        _assert_identical(fused, dense)
+
+    def test_streaming_rule_keeps_the_ingest_path(self, data):
+        train, test = data
+        tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                              _proto("stc"),
+                              TrainerConfig(lr=0.05, seed=0, ingest=True))
+        assert tr.ingest is True
+
+
+# ---------------------------------------------------------------------------
+# Byzantine valid-update faults
+# ---------------------------------------------------------------------------
+
+
+class TestByzantineFaults:
+    def test_membership_is_deterministic_and_calibrated(self):
+        f = SignFlipFault(fraction=0.3)
+        ids = np.arange(20000)
+        member = np.asarray([f.is_byzantine(int(c)) for c in ids[:200]])
+        member2 = np.asarray([f.is_byzantine(int(c)) for c in ids[:200]])
+        np.testing.assert_array_equal(member, member2)
+        frac = np.mean([f.is_byzantine(int(c)) for c in ids])
+        assert abs(frac - 0.3) < 0.02
+
+    def test_fraction_bounds_validated(self):
+        with pytest.raises(ValueError, match="fraction"):
+            SignFlipFault(fraction=1.5)
+
+    def test_honest_clients_untouched_and_no_rng_draws(self):
+        f = SignFlipFault(fraction=0.5)
+        honest = next(c for c in range(100) if not f.is_byzantine(c))
+        byz = next(c for c in range(100) if f.is_byzantine(c))
+        v = np.ones(8, np.float32)
+        # rng=None proves the hook consumes NO draws (the determinism
+        # contract: inserting the attack must not shift the crash/corrupt
+        # fault streams of an existing trace)
+        assert f.byzantine(v, honest, None) is v
+        np.testing.assert_array_equal(f.byzantine(v, byz, None), -v)
+
+    def test_rewrite_dense_scales(self):
+        v = np.asarray([1.0, -2.0, 3.0], np.float32)
+        np.testing.assert_array_equal(_rewrite_valid(v, -2.0),
+                                      np.asarray([-2.0, 4.0, -6.0]))
+
+    def test_rewrite_stc_wire_stays_valid(self):
+        """Sign-flipping an STC stream negates µ only -- the positions and
+        length are untouched, so admission control passes by construction
+        and the decode is exactly the negated update."""
+        p = make_protocol("stc", sparsity_up=0.1, sparsity_down=0.1)
+        vec = np.random.default_rng(0).standard_normal(400).astype(np.float32)
+        st = p.init_client_state(400)
+        msg, _, _ = p.encode(jnp.asarray(vec), st)
+        wm = p.encode_wire(np.asarray(msg), direction="up")
+        flipped = _rewrite_valid(wm, -1.0)
+        p.validate_wire(flipped, direction="up")    # must not raise
+        np.testing.assert_allclose(p.decode_wire(flipped, direction="up"),
+                                   -np.asarray(msg), rtol=1e-5, atol=1e-7)
+        assert flipped.bit_len == wm.bit_len
+
+    def test_rewrite_sign_plane_stays_valid(self):
+        """A sign plane has no µ to negate: the attack inverts the plane
+        bits; a positive factor (scale attack) cannot scale ±1 symbols and
+        leaves the message untouched."""
+        p = make_protocol("signsgd")
+        vec = np.random.default_rng(1).standard_normal(200).astype(np.float32)
+        wm = p.encode_wire(np.sign(vec), direction="up")
+        flipped = _rewrite_valid(wm, -1.0)
+        p.validate_wire(flipped, direction="up")    # must not raise
+        np.testing.assert_allclose(p.decode_wire(flipped, direction="up"),
+                                   -p.decode_wire(wm, direction="up"))
+        assert _rewrite_valid(wm, 2.0) is wm
+
+    def test_negated_mu_cannot_sneak_past_the_norm_screen(self):
+        """StcCodec.wire_norm must report the MAGNITUDE: a Byzantine
+        negated-µ stream has the same norm as its honest original."""
+        p = make_protocol("stc", sparsity_up=0.1, sparsity_down=0.1)
+        vec = np.random.default_rng(2).standard_normal(400).astype(np.float32)
+        msg, _, _ = p.encode(jnp.asarray(vec), p.init_client_state(400))
+        wm = p.encode_wire(np.asarray(msg), direction="up")
+        assert p.wire_norm(_rewrite_valid(wm, -1.0)) == \
+            pytest.approx(p.wire_norm(wm))
+        assert p.wire_norm(wm) > 0
+
+    def test_collusion_cohort_shares_one_direction(self):
+        f = CollusionFault(fraction=0.5, scale=1.0)
+        byz = [c for c in range(40) if f.is_byzantine(c)][:2]
+        v1 = np.random.default_rng(3).standard_normal(50).astype(np.float32)
+        v2 = np.random.default_rng(4).standard_normal(50).astype(np.float32)
+        a1 = np.asarray(f.byzantine(v1, byz[0], None))
+        a2 = np.asarray(f.byzantine(v2, byz[1], None))
+        cos = np.dot(a1, a2) / (np.linalg.norm(a1) * np.linalg.norm(a2))
+        assert cos == pytest.approx(1.0, abs=1e-5)   # same direction ...
+        assert np.linalg.norm(a1) == pytest.approx(np.linalg.norm(v1),
+                                                   rel=1e-5)  # ... own norm
+
+    def test_scale_attack_scales(self):
+        f = ScaleAttackFault(fraction=0.5, factor=100.0)
+        byz = next(c for c in range(100) if f.is_byzantine(c))
+        v = np.ones(4, np.float32)
+        np.testing.assert_allclose(f.byzantine(v, byz, None), 100.0 * v)
+
+    def test_median_holds_under_20pct_signflip_mean_collapses(self, data):
+        """End-to-end micro version of BENCH_robust's acceptance bar."""
+        train, test = data
+        env = FedEnvironment(n_clients=20, participation=0.5,
+                             classes_per_client=10, batch_size=10)
+        accs = {}
+        for rname in ("mean", "coordinate_median"):
+            tr = EventDrivenTrainer(
+                MODEL_ZOO["logreg"], train, test, env,
+                make_protocol("baseline", rule=rname),
+                TrainerConfig(lr=0.06, seed=0), scenario="steady",
+                faults=make_fault("sign-flip", scale=10.0, fraction=0.2))
+            hist = tr.run(12, eval_every=12)
+            accs[rname] = hist[-1]["acc"]
+        assert accs["coordinate_median"] > 0.75
+        assert accs["mean"] < 0.4

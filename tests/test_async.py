@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Codec, make_protocol, register_protocol
+from repro.core import Codec, make_protocol
 from repro.core.compression import get_stc_backend, majority_vote_sign
 from repro.core.protocols import _REGISTRY
 from repro.data import make_classification
@@ -319,40 +319,22 @@ class TestBufferedTrainer:
         np.testing.assert_array_equal(np.asarray(tr.server_state.residual),
                                       res0)
 
-    def test_legacy_codec_without_mask_api_is_rejected(self, data):
-        @register_protocol
-        @dataclasses.dataclass(frozen=True)
-        class LegacyMean(Codec):
-            name = "legacy-mean-test"
+    def test_legacy_codec_without_mask_api_is_rejected(self):
+        """The pre-mask 2-arg ``aggregate`` signature is gone: the class
+        DEFINITION fails loudly (naming the migration), so a legacy codec
+        can never reach a trainer or the registry."""
+        with pytest.raises(TypeError, match="masked aggregation API"):
+            @dataclasses.dataclass(frozen=True)
+            class LegacyMean(Codec):
+                name = "legacy-mean-test"
 
-            def encode(self, delta, state):
-                return delta, state, None
+                def encode(self, delta, state):
+                    return delta, state, None
 
-            def aggregate(self, msgs, server_state):   # pre-mask signature
-                return jnp.mean(msgs, axis=0), server_state, None
+                def aggregate(self, msgs, server_state):   # pre-mask
+                    return jnp.mean(msgs, axis=0), server_state, None
 
-            def upload_bits(self, numel):
-                return 32.0 * numel
-
-            def download_bits(self, numel, n_participating=1):
-                return 32.0 * numel
-
-        try:
-            train, test = data
-            # the synchronous trainer still accepts it ...
-            tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
-                                  make_protocol("legacy-mean-test"),
-                                  TrainerConfig(lr=0.05))
-            tr.run(1, eval_every=1)
-            assert np.all(np.isfinite(np.asarray(tr.params_vec)))
-            # ... buffered aggregation needs the masked API
-            with pytest.raises(TypeError, match="mask"):
-                BufferedFederatedTrainer(MODEL_ZOO["logreg"], train, test,
-                                         _env(), make_protocol(
-                                             "legacy-mean-test"),
-                                         TrainerConfig(lr=0.05))
-        finally:
-            _REGISTRY.pop("legacy-mean-test", None)
+        assert "legacy-mean-test" not in _REGISTRY
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,7 @@ except ImportError:  # minimal deterministic fallback (see the stub)
 
 from repro.core import (Codec, chunk_codec, chunk_spec_from_sizes,
                         chunk_spec_from_tree, get_stc_backend, make_protocol,
-                        register_protocol, registered_protocols,
-                        whole_vector_spec)
+                        registered_protocols, whole_vector_spec)
 from repro.core.chunking import ChunkedCodec
 from repro.core.protocols import _REGISTRY
 from repro.core.residual import stack_states
@@ -349,26 +348,17 @@ class TestChunkedCodecContract:
         with pytest.raises(TypeError, match="already-chunked"):
             chunk_codec(cc, whole_vector_spec(10))
 
-        @register_protocol
-        @dataclasses.dataclass(frozen=True)
-        class LegacyAgg(Codec):
-            name = "legacy-agg-chunk-test"
+        # a pre-mask 2-arg aggregate can no longer even be DEFINED, so
+        # chunk_codec never sees one
+        with pytest.raises(TypeError, match="masked aggregation API"):
+            @dataclasses.dataclass(frozen=True)
+            class LegacyAgg(Codec):
+                name = "legacy-agg-chunk-test"
 
-            def encode(self, delta, state):
-                return delta, state, None
+                def aggregate(self, msgs, server_state):    # pre-mask
+                    return jnp.mean(msgs, axis=0), server_state, None
 
-            def aggregate(self, msgs, server_state):    # pre-mask signature
-                return jnp.mean(msgs, axis=0), server_state, None
-
-            def upload_bits(self, numel):
-                return 32.0 * numel
-
-        try:
-            with pytest.raises(TypeError, match="mask"):
-                chunk_codec(make_protocol("legacy-agg-chunk-test"),
-                            whole_vector_spec(10))
-        finally:
-            _REGISTRY.pop("legacy-agg-chunk-test", None)
+        assert "legacy-agg-chunk-test" not in _REGISTRY
 
     def test_p_fn_builds_per_layer_codecs(self):
         spec = chunk_spec_from_sizes([16, 16], names=["dense", "embed"],

@@ -128,7 +128,7 @@ class TestRegistry:
         assert "ternquant" in registered_protocols()
 
     def test_unknown_name_lists_registered(self):
-        with pytest.raises(ValueError) as ei:
+        with pytest.raises(KeyError) as ei:
             make_protocol("nope")
         msg = str(ei.value)
         assert "nope" in msg

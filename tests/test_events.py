@@ -298,36 +298,22 @@ class TestEventDrivenTrainer:
         assert dense.n_dropped == fused.n_dropped
         assert dense.n_lost == fused.n_lost
 
-    def test_legacy_codec_without_mask_api_is_rejected(self, data):
-        train, test = data
-        from repro.core import Codec, register_protocol
+    def test_legacy_codec_without_mask_api_is_rejected(self):
+        """The pre-mask 2-arg ``tree_reduce`` override is equally dead:
+        the class definition itself raises, naming the migration."""
+        from repro.core import Codec
         from repro.core.protocols import _REGISTRY
         import jax.numpy as jnp
 
-        @register_protocol
-        @dataclasses.dataclass(frozen=True)
-        class LegacyMeanEv(Codec):
-            name = "legacy-mean-events-test"
+        with pytest.raises(TypeError, match="masked aggregation API"):
+            @dataclasses.dataclass(frozen=True)
+            class LegacyMeanEv(Codec):
+                name = "legacy-mean-events-test"
 
-            def encode(self, delta, state):
-                return delta, state, None
+                def tree_reduce(self, msgs, axes, n_clients):   # pre-mask
+                    return msgs
 
-            def aggregate(self, msgs, server_state):   # pre-mask signature
-                return jnp.mean(msgs, axis=0), server_state, None
-
-            def upload_bits(self, numel):
-                return 32.0 * numel
-
-            def download_bits(self, numel, n_participating=1):
-                return 32.0 * numel
-
-        try:
-            with pytest.raises(TypeError, match="mask"):
-                EventDrivenTrainer(MODEL_ZOO["logreg"], train, test, _env(),
-                                   make_protocol("legacy-mean-events-test"),
-                                   TrainerConfig(lr=0.05))
-        finally:
-            _REGISTRY.pop("legacy-mean-events-test", None)
+        assert "legacy-mean-events-test" not in _REGISTRY
 
 
 # ---------------------------------------------------------------------------

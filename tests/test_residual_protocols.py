@@ -62,7 +62,7 @@ class TestProtocols:
         stc = make_protocol("stc")
         assert stc.sparsity_up == pytest.approx(1 / 400)
         assert stc.error_feedback
-        with pytest.raises(ValueError):
+        with pytest.raises(KeyError):
             make_protocol("nope")
 
     def test_stc_bits_much_smaller(self):
@@ -84,7 +84,7 @@ class TestProtocols:
         p = make_protocol("stc", sparsity_up=0.05, sparsity_down=0.05)
         msgs = jnp.stack([_rand(200, 5), _rand(200, 6)])
         srv = p.init_server_state(200)
-        out, srv2, stats = p.server_aggregate(msgs, srv)
+        out, srv2, stats = p.aggregate(msgs, srv)
         # output is ternary
         vals = np.unique(np.asarray(out))
         mu = float(stats.mu)
@@ -96,10 +96,10 @@ class TestProtocols:
             np.asarray(jnp.mean(msgs, axis=0)), rtol=1e-5, atol=1e-6)
 
     def test_wire_roundtrip_through_codec(self):
-        """client_compress -> Golomb encode -> decode == same message."""
+        """encode -> Golomb encode -> decode == same message."""
         p = make_protocol("stc", sparsity_up=0.02, sparsity_down=0.02)
         st_ = p.init_client_state(400)
-        msg, _, _ = p.client_compress(_rand(400, 9), st_)
+        msg, _, _ = p.encode(_rand(400, 9), st_)
         payload, bit_len, mu, n = encode_ternary(np.asarray(msg),
                                                  p.sparsity_up)
         back = decode_ternary(payload, bit_len, mu, n, p.sparsity_up)

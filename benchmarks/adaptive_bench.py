@@ -1,0 +1,132 @@
+"""Adaptive-sparsity convergence-vs-bits benchmark (accuracy-per-bit).
+
+    PYTHONPATH=src python -m benchmarks.adaptive_bench [--smoke]
+
+One synchronous federated run per sparsity controller on the non-IID
+synthetic benchmark (100 clients, 4 classes each, cohort 10 -- the same
+fleet operating point as the events/async benches), all through the SAME
+chunked STC codec so the only variable is WHO sets each chunk's k:
+
+  adaptive/<ctrl>/acc             -- accuracy after the round budget
+  adaptive/<ctrl>/bits_up         -- total MEASURED upstream bits
+  adaptive/<ctrl>/bits_to_target  -- measured upstream bits when the run
+                                     first reaches the fixed-p baseline's
+                                     final accuracy (NaN = never reached;
+                                     check_bench treats NaN rows as
+                                     report-only warnings)
+
+``fixed`` is the static-p baseline every controller is judged against;
+``ternquant`` (Xu et al. 2020 dense ternary) rides along as the
+registry's non-sparse comparison entry.  The paper's Pareto claim is the
+``bits_to_target`` column: an adaptive controller earns its keep by
+reaching the fixed-p final accuracy with strictly fewer measured bits.
+
+Written to ``benchmarks/BENCH_adaptive.json`` (unit "mixed" -- report-only
+in the regression gate).  ``--smoke`` is the CI lane: two rounds per
+controller at toy scale, asserting the measured-bits <= wire-bound
+invariant every round under time-varying k.
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+from repro.data import make_classification
+from repro.fed import FedEnvironment, FederatedTrainer, TrainerConfig
+from repro.models.paper_models import MODEL_ZOO
+
+_N_CLIENTS = 100
+_ETA = 1 / 10                       # cohort of 10
+_ROUNDS = 25
+_P = 1 / 20                         # fixed-p schedule (base_k ~ 6 per chunk)
+_CHUNKS = 128
+_LR = 0.06
+
+#: controller label -> TrainerConfig(controller=) value (None = static path)
+_CONTROLLERS = (
+    ("fixed", None),
+    ("residual_mass", ("residual_mass", {"budget": 0.75})),
+    ("snr_constant", ("snr_constant", {"snr": 1.0})),
+)
+
+
+def _make_controller(spec):
+    from repro.core import make_controller
+    if spec is None:
+        return None
+    name, kw = spec
+    return make_controller(name, **kw)
+
+
+def _trainer(train, test, env, controller, protocol="stc", chunks=_CHUNKS):
+    from repro.core import make_protocol
+    kw = {"stc": dict(sparsity_up=_P, sparsity_down=_P)}
+    return FederatedTrainer(
+        MODEL_ZOO["logreg"], train, test, env,
+        make_protocol(protocol, **kw.get(protocol, {})),
+        TrainerConfig(lr=_LR, seed=0, chunks=chunks, controller=controller))
+
+
+def _bits_to_target(history, target: float) -> float:
+    """Cumulative measured upstream bits at the first eval reaching
+    ``target`` accuracy (NaN when the run never gets there)."""
+    for rec in history:
+        if rec["acc"] >= target:
+            return float(rec["bits_up"])
+    return float("nan")
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    rows = []
+    if smoke:
+        train, test = make_classification(seed=0, n=600, n_test=160)
+        env = FedEnvironment(n_clients=12, participation=0.5,
+                             classes_per_client=2, batch_size=10)
+        for label, spec in _CONTROLLERS:
+            tr = _trainer(train, test, env, _make_controller(spec),
+                          chunks=32)
+            hist = tr.run(2, eval_every=1)
+            # the wire bound must stay a true ceiling under time-varying k
+            for row in tr.wire_log:
+                assert row["bits_up_bound"] is None or \
+                    row["bits_up"] <= row["bits_up_bound"], (label, row)
+            rows.append((f"adaptive/smoke/{label}/acc", hist[-1]["acc"],
+                         "2 rounds, wire bound asserted per round"))
+            if verbose:
+                print(f"adaptive/smoke/{label}: acc={hist[-1]['acc']:.3f}")
+        return rows
+
+    train, test = make_classification(seed=0, n=6000, n_test=1200)
+    env = FedEnvironment(n_clients=_N_CLIENTS, participation=_ETA,
+                         classes_per_client=4, batch_size=10)
+    note = (f"rounds={_ROUNDS} clients={_N_CLIENTS} p={_P:g} "
+            f"chunks={_CHUNKS} lr={_LR}")
+
+    histories = {}
+    for label, spec in _CONTROLLERS:
+        tr = _trainer(train, test, env, _make_controller(spec))
+        histories[label] = tr.run(_ROUNDS, eval_every=1)
+    # the registry's dense-ternary comparison entry (flat, no controller)
+    tr = _trainer(train, test, env, None, protocol="ternquant", chunks=None)
+    histories["ternquant"] = tr.run(_ROUNDS, eval_every=1)
+
+    target = histories["fixed"][-1]["acc"]
+    for label, hist in histories.items():
+        acc = hist[-1]["acc"]
+        bits = float(hist[-1]["bits_up"])
+        b2t = _bits_to_target(hist, target)
+        stem = f"adaptive/{label}"
+        rows.append((f"{stem}/acc", acc, note))
+        rows.append((f"{stem}/bits_up", bits, note))
+        rows.append((f"{stem}/bits_to_target", b2t,
+                     f"target=fixed final acc {target:.4f}; " + note))
+        if verbose:
+            b2s = "never" if math.isnan(b2t) else f"{b2t / 8e6:.3f}MB"
+            print(f"{stem}: acc={acc:.4f} upMB={bits / 8e6:.3f} "
+                  f"bits_to_target={b2s}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(verbose=True, smoke="--smoke" in sys.argv)

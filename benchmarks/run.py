@@ -29,6 +29,7 @@ BENCH_INGEST_PATH = os.path.join(_HERE, "BENCH_ingest.json")
 BENCH_EVENTS_PATH = os.path.join(_HERE, "BENCH_events.json")
 BENCH_FAULTS_PATH = os.path.join(_HERE, "BENCH_faults.json")
 BENCH_ROBUST_PATH = os.path.join(_HERE, "BENCH_robust.json")
+BENCH_ADAPTIVE_PATH = os.path.join(_HERE, "BENCH_adaptive.json")
 
 
 def _write_bench(path: str, rows, unit: str = "us") -> None:
@@ -84,6 +85,10 @@ def write_bench_robust(rows) -> None:
     _write_bench(BENCH_ROBUST_PATH, rows, unit="mixed")
 
 
+def write_bench_adaptive(rows) -> None:
+    _write_bench(BENCH_ADAPTIVE_PATH, rows, unit="mixed")
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
@@ -92,11 +97,11 @@ def main() -> None:
 
     rows = []
     which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                     "events", "faults", "robust", "async", "fig3", "fig5",
-                     "fig2", "table4", "fig8", "roofline"]
+                     "events", "faults", "robust", "adaptive", "async",
+                     "fig3", "fig5", "fig2", "table4", "fig8", "roofline"]
     if quick:
         which = args or ["golomb", "wire", "kernels", "chunked", "ingest",
-                         "events", "faults", "robust", "fig3"]
+                         "events", "faults", "robust", "adaptive", "fig3"]
 
     for name in which:
         print(f"# === {name} ===", flush=True)
@@ -138,6 +143,12 @@ def main() -> None:
             if not quick:    # quick = smoke scale; keep the tracked file
                 write_bench_robust(brows)    # at the full rule x attack sweep
             rows += brows
+        elif name == "adaptive":
+            from benchmarks import adaptive_bench
+            adrows = adaptive_bench.run(verbose=False, smoke=quick)
+            if not quick:    # quick = smoke scale; keep the tracked file
+                write_bench_adaptive(adrows)  # full accuracy-per-bit sweep
+            rows += adrows
         elif name == "async":
             from benchmarks import async_bench
             arows = async_bench.run(verbose=False)

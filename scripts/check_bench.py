@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import statistics
 import subprocess
@@ -31,17 +32,24 @@ DEFAULT_FILES = ("benchmarks/BENCH_stc.json", "benchmarks/BENCH_wire.json",
                  "benchmarks/BENCH_ingest.json",
                  "benchmarks/BENCH_events.json",
                  "benchmarks/BENCH_faults.json",
-                 "benchmarks/BENCH_robust.json")
+                 "benchmarks/BENCH_robust.json",
+                 "benchmarks/BENCH_adaptive.json")
 
 
 def row_value(row: dict):
     """A bench row's scalar, whatever key vintage wrote it (None when the
     row carries no recognizable value key -- e.g. a bench family written by
-    a newer run that the committed baseline vintage predates)."""
-    if "us" in row:
-        return float(row["us"])
-    if "value" in row:
-        return float(row["value"])
+    a newer run that the committed baseline vintage predates -- or when the
+    value is null/non-numeric/non-finite: quality benches legitimately emit
+    NaN rows such as "bits to an accuracy the run never reached", and those
+    must downgrade to report-only warnings, never crash the gate)."""
+    for key in ("us", "value"):
+        if key in row:
+            try:
+                val = float(row[key])
+            except (TypeError, ValueError):
+                return None
+            return val if math.isfinite(val) else None
     return None
 
 
@@ -135,7 +143,7 @@ def main(argv=None) -> int:
                             ("fresh", unparsed_fresh)):
             for name in names:
                 print(f"  WARNING unparsed {side} row {name!r} "
-                      "(no us/value key); report-only")
+                      "(no us/value key, or null/NaN value); report-only")
         print("\n".join(report))
         if regressions and fresh_payload.get("unit", "us") == "us":
             failed = True

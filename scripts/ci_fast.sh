@@ -52,4 +52,7 @@ python -m benchmarks.faults_bench --smoke
 stage robust-smoke
 python -m benchmarks.robust_bench --smoke
 
+stage adaptive-smoke
+python -m benchmarks.adaptive_bench --smoke
+
 stage done

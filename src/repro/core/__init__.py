@@ -78,6 +78,16 @@ from .protocols import (
     register_protocol,
     registered_protocols,
 )
+from .adaptive import (
+    FixedController,
+    ResidualMassController,
+    SnrConstantController,
+    SparsityController,
+    make_controller,
+    register_controller,
+    registered_controllers,
+    validate_sparsity,
+)
 from .chunking import (
     ChunkedCodec,
     ChunkSpec,
@@ -118,6 +128,9 @@ __all__ = [
     "registered_rules", "get_rule_class",
     "PROTOCOLS", "Codec", "Protocol", "make_protocol", "register_protocol",
     "registered_protocols", "get_protocol_class",
+    "SparsityController", "FixedController", "ResidualMassController",
+    "SnrConstantController", "make_controller", "register_controller",
+    "registered_controllers", "validate_sparsity",
     "ChunkSpec", "ChunkedCodec", "chunk_codec", "chunk_spec_from_sizes",
     "chunk_spec_from_tree", "whole_vector_spec",
     "ResidualState", "compress_with_feedback", "init_residual",

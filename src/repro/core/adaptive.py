@@ -1,0 +1,280 @@
+"""Adaptive per-chunk sparsity controllers (accuracy-per-bit Pareto).
+
+STC's central claim is Pareto-superiority: target accuracies reached within
+both fewer iterations and a smaller communication budget.  The static
+``p_fn`` schedule of :func:`repro.core.chunking.chunk_codec` fixes each
+(layer, chunk)'s sparsity for the whole run; this module closes the loop --
+each chunk's k is set from OBSERVED per-chunk update statistics inside the
+jitted round, in the spirit of CFedAvg's SNR-constant compressors (Yang et
+al. 2021) with the residual-mass budget allocator as the simpler stateless
+sibling.
+
+A :class:`SparsityController` is a frozen dataclass (hashable, safe as a
+jit-closure constant on a frozen codec) with three hooks:
+
+* ``caps(base_ks, valid)`` -- STATIC per-chunk selection ceilings, computed
+  host-side once per trace.  They bound the dynamic k so the in-jit
+  selection can run one fixed-size ``top_k`` (see
+  :func:`repro.core.compression.select_batch_dynamic`) and so the measured
+  wire bits stay below the deterministic stream bound.
+* ``init_state(base_ks)`` -- the controller's state pytree leaf (or None
+  for stateless controllers).  Stateful controllers live INSIDE the codec's
+  client/server state pytrees (`{"base": codec_state, "ctrl": state}`), so
+  state updates ride the jitted round with no host round-trips and
+  checkpoint/restore for free.
+* ``chunk_ks(carried, state, base_ks=, caps=)`` -- the in-jit policy:
+  observe the ``(R, n_chunks, chunk_numel)`` error-feedback pre-image
+  (update + residual, zero-padded past each chunk's valid length) and
+  return ``((R, n_chunks) int32 per-row k, new_state)``.  Everything here
+  is traced jnp; ks are clipped to ``[1, caps]`` by contract.
+
+Registered controllers::
+
+    fixed          -- byte-identical to the static p_fn path (no-op marker)
+    residual_mass  -- k per chunk proportional to its share of residual
+                      l2 mass, under ``budget`` x the fixed-p k budget
+    snr_constant   -- holds each chunk's selected-vs-discarded energy ratio
+                      at ``snr`` via an EMA over instantaneous k (stateful)
+
+Hyphens and underscores are interchangeable in names ("residual-mass" ==
+"residual_mass").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import resolve
+
+__all__ = [
+    "SparsityController",
+    "FixedController",
+    "ResidualMassController",
+    "SnrConstantController",
+    "register_controller",
+    "make_controller",
+    "registered_controllers",
+    "validate_sparsity",
+]
+
+
+def validate_sparsity(p, layer: str, depth) -> float:
+    """Guard a schedule- or controller-produced sparsity: finite and in
+    (0, 1].  Raises a typed ValueError naming the (layer, chunk) so a bad
+    ``p_fn`` fails loudly at wrap time instead of silently yielding k=0
+    selections or full-dense chunks with a wrong bit ledger."""
+    try:
+        pf = float(p)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"sparsity schedule returned non-numeric p={p!r} for layer "
+            f"{layer!r} (depth {depth}); p must be a float in (0, 1]")
+    if not math.isfinite(pf) or not 0.0 < pf <= 1.0:
+        raise ValueError(
+            f"sparsity schedule returned invalid p={pf!r} for layer "
+            f"{layer!r} (depth {depth}); p must be finite and in (0, 1]")
+    return pf
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityController:
+    """Base class: per-chunk k policy evaluated inside the jitted round.
+
+    Subclass, set ``name``, and register with :func:`register_controller`.
+    ``adapts=False`` marks controllers that are pure markers for the static
+    path (the chunked codec then runs the byte-identical fixed-k fast
+    path); ``stateful=True`` makes the codec carry ``init_state``'s leaf in
+    its state pytrees and thread it through ``chunk_ks``.
+    """
+
+    name: ClassVar[str] = ""
+    adapts: ClassVar[bool] = True
+    stateful: ClassVar[bool] = False
+
+    #: dynamic k may exceed the fixed-p k by at most this factor (per
+    #: chunk, always capped by the chunk's unpadded length).  Bounds both
+    #: the top_k workspace and the worst-case wire bits.
+    k_max_scale: float = 4.0
+
+    def __post_init__(self):
+        if not (isinstance(self.k_max_scale, (int, float))
+                and math.isfinite(self.k_max_scale)
+                and self.k_max_scale >= 1.0):
+            raise ValueError(
+                f"{type(self).__name__}: k_max_scale must be finite and "
+                f">= 1, got {self.k_max_scale!r}")
+
+    # -- static geometry (host-side, once per trace) ------------------------
+    def caps(self, base_ks: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        """Per-chunk ceiling on the dynamic k (static int64 numpy)."""
+        base_ks = np.asarray(base_ks, np.int64)
+        valid = np.asarray(valid, np.int64)
+        hi = np.ceil(base_ks.astype(np.float64) * float(self.k_max_scale))
+        return np.minimum(np.maximum(hi.astype(np.int64), base_ks), valid)
+
+    def init_state(self, base_ks: np.ndarray):
+        """Controller state leaf for one client / the server (None when
+        stateless)."""
+        return None
+
+    # -- the in-jit policy --------------------------------------------------
+    def chunk_ks(self, carried, state, *, base_ks, caps):
+        """``(R, C, W)`` carried blocks -> ``((R, C) int32 ks, new_state)``.
+
+        ``state`` is ``init_state``'s leaf (possibly with leading batch
+        axes matching R, or None for stateless controllers / the tree
+        path, which must then fall back to an instantaneous policy)."""
+        raise NotImplementedError(type(self).__name__)
+
+
+CONTROLLERS: dict = {}
+
+
+def register_controller(cls):
+    """Class decorator: add a controller to the registry under its name."""
+    CONTROLLERS[cls.name] = cls
+    return cls
+
+
+def registered_controllers() -> tuple:
+    return tuple(sorted(CONTROLLERS))
+
+
+def make_controller(controller, **overrides) -> SparsityController:
+    """Resolve a registered name ("fixed", "residual-mass", ...) or pass an
+    instance through (the one shared :func:`repro.core.registry.resolve`
+    semantics)."""
+    if isinstance(controller, str):
+        controller = controller.replace("-", "_")
+    return resolve("sparsity controller", controller, CONTROLLERS,
+                   SparsityController, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# the registered family
+# ---------------------------------------------------------------------------
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class FixedController(SparsityController):
+    """The static schedule, as a registered no-op marker: the chunked codec
+    routes ``controller="fixed"`` through EXACTLY the static fixed-k code
+    path (byte-identical params, ledgers and wire log -- the regression
+    anchor every adaptive run is compared against)."""
+
+    name: ClassVar[str] = "fixed"
+    adapts: ClassVar[bool] = False
+
+    def caps(self, base_ks, valid):
+        return np.asarray(base_ks, np.int64)
+
+    def chunk_ks(self, carried, state, *, base_ks, caps):
+        R = carried.shape[0]
+        ks = jnp.broadcast_to(jnp.asarray(np.asarray(base_ks), jnp.int32),
+                              (R, len(base_ks)))
+        return ks, state
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class ResidualMassController(SparsityController):
+    """Budgeted proportional allocation: chunk c gets
+    ``k_c = floor(B * mass_c / sum(mass))`` with ``B = budget * sum(fixed-p
+    ks)`` -- coordinates go where the error-feedback mass actually is,
+    at a total bit budget ``budget`` x the fixed-p schedule's.  Stateless:
+    the policy is a pure function of the carried update, so client/server
+    state pytrees keep their fixed-path structure."""
+
+    name: ClassVar[str] = "residual_mass"
+
+    #: total-k budget as a fraction of the fixed-p schedule's sum(ks);
+    #: budget < 1 spends strictly fewer coordinates (and so bits) per round
+    budget: float = 1.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not (isinstance(self.budget, (int, float))
+                and math.isfinite(self.budget) and self.budget > 0.0):
+            raise ValueError(
+                f"residual_mass: budget must be finite and > 0, got "
+                f"{self.budget!r}")
+
+    def chunk_ks(self, carried, state, *, base_ks, caps):
+        mass = jnp.sum(jnp.square(carried.astype(jnp.float32)),
+                       axis=-1)                                # (R, C)
+        total = jnp.sum(mass, axis=-1, keepdims=True)
+        frac = mass / jnp.maximum(total, 1e-30)
+        B = float(self.budget) * float(np.asarray(base_ks, np.int64).sum())
+        ks = jnp.floor(B * frac).astype(jnp.int32)
+        ks = jnp.clip(ks, 1, jnp.asarray(np.asarray(caps), jnp.int32)[None])
+        return ks, state
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class SnrConstantController(SparsityController):
+    """CFedAvg-style SNR-constant sparsification: per chunk, pick the
+    smallest k whose selected energy reaches the fraction
+    ``f = snr / (1 + snr)`` of the carried energy (selected-vs-discarded
+    ratio ``snr``), then smooth with an EMA over rounds so one noisy update
+    cannot blow the budget.  The EMA state lives in the codec's state
+    pytrees (per client upstream, server-side downstream) and updates
+    inside the jitted round; with ``state=None`` (the stateless tree path)
+    the instantaneous k is used directly."""
+
+    name: ClassVar[str] = "snr_constant"
+    stateful: ClassVar[bool] = True
+
+    #: target selected/discarded energy ratio (higher = denser messages)
+    snr: float = 3.0
+    #: EMA retention of the running per-chunk k estimate
+    ema: float = 0.5
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not (isinstance(self.snr, (int, float))
+                and math.isfinite(self.snr) and self.snr > 0.0):
+            raise ValueError(
+                f"snr_constant: snr must be finite and > 0, got "
+                f"{self.snr!r}")
+        if not (isinstance(self.ema, (int, float))
+                and math.isfinite(self.ema) and 0.0 <= self.ema < 1.0):
+            raise ValueError(
+                f"snr_constant: ema must be in [0, 1), got {self.ema!r}")
+
+    def init_state(self, base_ks):
+        # seed the running k estimate at the fixed-p schedule
+        return jnp.asarray(np.asarray(base_ks), jnp.float32)
+
+    def chunk_ks(self, carried, state, *, base_ks, caps):
+        R, C, W = carried.shape
+        a2 = jnp.square(carried.astype(jnp.float32)).reshape(R * C, W)
+        kcap = min(int(np.asarray(caps, np.int64).max()), W)
+        top = jax.lax.top_k(a2, kcap)[0]
+        cum = jnp.cumsum(top, axis=1)
+        tot = jnp.sum(a2, axis=1, keepdims=True)
+        f = float(self.snr) / (1.0 + float(self.snr))
+        # smallest k with cum[k-1] >= f * tot (k = kcap when never reached)
+        k_inst = 1 + jnp.sum((cum < f * tot).astype(jnp.int32), axis=1)
+        k_inst = jnp.minimum(k_inst, kcap).reshape(R, C).astype(jnp.float32)
+        if state is None:
+            new_state, k_est = None, k_inst
+        else:
+            upd = k_inst
+            if state.ndim == 1:          # server state: (C,), carried (1,C,W)
+                upd = jnp.mean(k_inst, axis=0)
+            new_state = (float(self.ema) * state
+                         + (1.0 - float(self.ema)) * upd)
+            k_est = jnp.broadcast_to(
+                new_state if new_state.ndim == 2 else new_state[None],
+                (R, C))
+        caps_j = jnp.asarray(np.asarray(caps), jnp.int32)[None]
+        ks = jnp.clip(jnp.round(k_est).astype(jnp.int32), 1, caps_j)
+        return ks, new_state

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import wire
+from .adaptive import (SparsityController, make_controller,
+                       validate_sparsity)
 from .compression import CompressionStats
 from .protocols import Codec
 
@@ -256,6 +258,10 @@ class ChunkedCodec(Codec):
     base: Codec = None
     spec: ChunkSpec = None
     layer_codecs: tuple = ()
+    #: adaptive per-chunk sparsity controller (repro.core.adaptive); None
+    #: or a non-adapting controller ("fixed") runs the static path
+    #: byte-identically
+    controller: Optional[SparsityController] = None
 
     # -- forwarded base behaviour (properties shadow the base-class
     #    ClassVars: a wrapper is whatever its base is) ------------------------
@@ -287,6 +293,32 @@ class ChunkedCodec(Codec):
     def _groups(self):
         return _chunk_groups(self.spec, self.layer_codecs)
 
+    # -- adaptive-controller geometry ----------------------------------------
+    def _adapts(self) -> bool:
+        return self.controller is not None and self.controller.adapts
+
+    def _ctrl_stateful(self) -> bool:
+        return self._adapts() and self.controller.stateful
+
+    def _ctrl_geometry(self, direction: str):
+        """Static (base_ks, caps) for the controller: the fixed-p schedule's
+        per-chunk k budget and the controller's selection ceilings."""
+        base_ks = self.spec.chunk_ks(self._chunk_ps(direction))
+        valid = np.asarray(self.spec.chunk_valid, np.int64)
+        return base_ks, self.controller.caps(base_ks, valid)
+
+    def _split_ctrl(self, state):
+        """Unwrap ``{"base": codec_state, "ctrl": controller_state}`` (the
+        wrap exists only for stateful controllers)."""
+        if not self._ctrl_stateful():
+            return state, None
+        return state["base"], state["ctrl"]
+
+    def _join_ctrl(self, base_state, ctrl_state):
+        if not self._ctrl_stateful():
+            return base_state
+        return {"base": base_state, "ctrl": ctrl_state}
+
     # -- state ----------------------------------------------------------------
     def _stacked_state(self, one):
         if one is None:
@@ -296,12 +328,22 @@ class ChunkedCodec(Codec):
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
 
     def init_client_state(self, numel: int):
-        return self._stacked_state(
+        base = self._stacked_state(
             self.base.init_client_state(self.spec.chunk_numel))
+        if not self._ctrl_stateful():
+            return base
+        return {"base": base,
+                "ctrl": self.controller.init_state(self._ctrl_geometry(
+                    "up")[0])}
 
     def init_server_state(self, numel: int):
-        return self._stacked_state(
+        base = self._stacked_state(
             self.base.init_server_state(self.spec.chunk_numel))
+        if not self._ctrl_stateful():
+            return base
+        return {"base": base,
+                "ctrl": self.controller.init_state(self._ctrl_geometry(
+                    "down")[0])}
 
     # -- client side ----------------------------------------------------------
     def encode(self, delta, state):
@@ -313,7 +355,15 @@ class ChunkedCodec(Codec):
     def encode_batch(self, deltas, states):
         spec = self.spec
         blocks = spec.split(deltas)            # (P, C, W)
-        if self.base.chunk_blocks:
+        if self._adapts():
+            base_st, ctrl_st = self._split_ctrl(states)
+            base_ks, caps = self._ctrl_geometry("up")
+            msg_blocks, base_st, ctrl_st, _ = \
+                self.base.encode_chunk_blocks_adaptive(
+                    blocks, base_st, self.controller, ctrl_st,
+                    base_ks=base_ks, caps=caps)
+            states = self._join_ctrl(base_st, ctrl_st)
+        elif self.base.chunk_blocks:
             ks = spec.chunk_ks(self._chunk_ps("up"))
             msg_blocks, states, _ = self.base.encode_chunk_blocks(
                 blocks, states, ks=ks)
@@ -338,7 +388,16 @@ class ChunkedCodec(Codec):
     def aggregate(self, msgs, server_state, mask=None, staleness=None):
         spec = self.spec
         blocks = spec.split(msgs)              # (P, C, W)
-        if self.base.chunk_blocks:
+        if self._adapts():
+            base_st, ctrl_st = self._split_ctrl(server_state)
+            base_ks, caps = self._ctrl_geometry("down")
+            out_blocks, base_st, ctrl_st, _ = \
+                self.base.aggregate_chunk_blocks_adaptive(
+                    blocks, base_st, self.controller, ctrl_st,
+                    base_ks=base_ks, caps=caps, mask=mask,
+                    staleness=staleness)
+            server_state = self._join_ctrl(base_st, ctrl_st)
+        elif self.base.chunk_blocks:
             ks = spec.chunk_ks(self._chunk_ps("down"))
             out_blocks, server_state, _ = self.base.aggregate_chunk_blocks(
                 blocks, server_state, ks=ks, mask=mask, staleness=staleness)
@@ -447,7 +506,17 @@ class ChunkedCodec(Codec):
 
     def finalize_ingest(self, combined, server_state):
         spec = self.spec
-        if self.base.chunk_blocks:
+        if self._adapts():
+            blocks = jnp.asarray(spec.split(np.asarray(combined)))
+            base_st, ctrl_st = self._split_ctrl(server_state)
+            base_ks, caps = self._ctrl_geometry("down")
+            # P=1 block tensor: the fused path's plain mean is the identity
+            out_blocks, base_st, ctrl_st, _ = \
+                self.base.aggregate_chunk_blocks_adaptive(
+                    blocks[None], base_st, self.controller, ctrl_st,
+                    base_ks=base_ks, caps=caps)
+            server_state = self._join_ctrl(base_st, ctrl_st)
+        elif self.base.chunk_blocks:
             blocks = jnp.asarray(spec.split(np.asarray(combined)))
             ks = spec.chunk_ks(self._chunk_ps("down"))
             # P=1 block tensor: the fused path's plain mean is the identity
@@ -510,31 +579,48 @@ class ChunkedCodec(Codec):
 
 
 def chunk_codec(base: Codec, spec: ChunkSpec,
-                p_fn: Optional[Callable] = None) -> ChunkedCodec:
+                p_fn: Optional[Callable] = None,
+                controller=None) -> ChunkedCodec:
     """Wrap ``base`` into a :class:`ChunkedCodec` over ``spec``.
 
     ``p_fn(layer_name, depth) -> p | None`` rescales the sparsity of layers
     whose codec declares ``sparsity_up``/``sparsity_down`` (None keeps the
-    base value); other codecs ignore the hook.  The wrapper forwards the
-    base codec's trainer-visible knobs (``local_iters``, staleness decay,
-    the aggregation ``rule``).  (Codecs predating the masked aggregate API
+    base value); other codecs ignore the hook.  Every schedule-produced p
+    is validated at wrap time (finite, 0 < p <= 1) with a ``ValueError``
+    naming the offending layer -- a silent k=0 or full-dense chunk would
+    corrupt the bit ledger downstream.
+
+    ``controller`` is a registered :class:`repro.core.adaptive.
+    SparsityController` name or instance; ``"fixed"``/None keep the static
+    path byte-identically, adaptive controllers require a base codec with
+    the fused chunk-blocks path.  The wrapper forwards the base codec's
+    trainer-visible knobs (``local_iters``, staleness decay, the
+    aggregation ``rule``).  (Codecs predating the masked aggregate API
     cannot exist anymore -- ``Codec.__init_subclass__`` rejects them at
     class-definition time.)
     """
     if isinstance(base, ChunkedCodec):
         raise TypeError("chunk_codec over an already-chunked codec")
+    ctrl = make_controller(controller) if controller is not None else None
+    if ctrl is not None and ctrl.adapts and not base.chunk_blocks:
+        raise TypeError(
+            f"adaptive sparsity controller {ctrl.name!r} requires a codec "
+            f"with the fused chunk-blocks path (chunk_blocks=True); "
+            f"{type(base).__name__} has none")
     fields = {f.name for f in dataclasses.fields(type(base))}
     layer_codecs = []
     for depth, lname in enumerate(spec.layer_names):
         c = base
         p = p_fn(lname, depth) if p_fn is not None else None
         if p is not None:
+            p = validate_sparsity(p, lname, depth)
             repl = {k: float(p) for k in ("sparsity_up", "sparsity_down")
                     if k in fields}
             if repl:
                 c = dataclasses.replace(base, **repl)
         layer_codecs.append(c)
     return ChunkedCodec(base=base, spec=spec, layer_codecs=tuple(layer_codecs),
+                        controller=ctrl,
                         local_iters=base.local_iters,
                         staleness_decay=base.staleness_decay,
                         rule=base.rule)

@@ -18,7 +18,7 @@ feedback) handling lives in :mod:`repro.core.residual`.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,7 @@ __all__ = [
     "unflatten_pytree",
     "stc_compress_pytree",
     "StcBackend",
+    "select_batch_dynamic",
     "register_stc_backend",
     "get_stc_backend",
     "STC_BACKENDS",
@@ -217,12 +218,20 @@ class StcBackend(NamedTuple):
     :func:`top_k_mask`).  It serves the chunked ``(layer, chunk)`` block
     codecs and the per-leaf tree path, so "jnp" vs "kernel" is one flag for
     every selection sweep in the repo.
+
+    ``select_batch_dynamic(x (B, n), ks, k_cap)`` is the TRACED-ks variant
+    behind the adaptive sparsity controllers
+    (:mod:`repro.core.adaptive`): ``ks`` may be a jnp array computed inside
+    the jitted round, bounded by the static ``k_cap``.  Backends that leave
+    it None fall back to the shared ``lax.top_k``-gather implementation
+    (the histogram kernel needs static per-row k).
     """
 
     name: str
     compress_with_residual: object
     compress_with_residual_batch: object
     select_batch: object = None
+    select_batch_dynamic: object = None
 
 
 def _jnp_compress_with_residual(delta, residual, p: float):
@@ -264,7 +273,39 @@ def _jnp_select_batch(x: jnp.ndarray, ks):
     return v, cnt, sums
 
 
-def stc_compress_blocks(carried: jnp.ndarray, ks, *, backend: str = "jnp"):
+def _jnp_select_batch_dynamic(x: jnp.ndarray, ks, k_cap: int):
+    """Per-row k-selection with TRACED per-row ks (the adaptive-controller
+    path): one static-size ``top_k`` of width ``k_cap`` bounds the
+    workspace, then the row's threshold is a dynamic ``take_along_axis``
+    gather at ``ks[b]-1``.  For any concrete ks <= k_cap this computes
+    exactly what :func:`_jnp_select_batch` computes (same selection, same
+    tie semantics); ks are clipped into ``[1, k_cap]``.
+    """
+    bsz, n = x.shape
+    k_cap = min(int(k_cap), n)
+    if k_cap < 1:
+        raise ValueError(f"k_cap must be >= 1, got {k_cap}")
+    a = jnp.abs(x.astype(jnp.float32))
+    topc = jax.lax.top_k(a, k_cap)[0]
+    kj = jnp.clip(jnp.asarray(ks, jnp.int32), 1, k_cap)
+    v = jnp.take_along_axis(topc, (kj - 1)[:, None], axis=1)[:, 0]
+    mask = (a >= v[:, None]) & (a > 0.0)
+    cnt = jnp.sum(mask.astype(jnp.int32), axis=1)
+    sums = jnp.sum(jnp.where(mask, a, 0.0), axis=1)
+    return v, cnt, sums
+
+
+def select_batch_dynamic(x: jnp.ndarray, ks, k_cap: int, *,
+                         backend: str = "jnp"):
+    """Registry dispatch for the traced-ks selection (falls back to the
+    shared jnp implementation for backends without a dynamic kernel)."""
+    be = get_stc_backend(backend)
+    sel = be.select_batch_dynamic or _jnp_select_batch_dynamic
+    return sel(x, ks, k_cap)
+
+
+def stc_compress_blocks(carried: jnp.ndarray, ks, *, backend: str = "jnp",
+                        k_cap: Optional[int] = None):
     """STC over independent (B, block_numel) rows with per-row k.
 
     The chunked-codec core: every row (one ``(layer, chunk)`` block, zero-
@@ -273,15 +314,27 @@ def stc_compress_blocks(carried: jnp.ndarray, ks, *, backend: str = "jnp"):
     Returns ``(tern, count, mu)`` with ``tern`` of the input shape and
     (B,) count/mu vectors.  A single whole-vector row is bit-identical to
     :func:`stc_compress`.
+
+    ``ks`` is normally a static numpy/int spec; a jnp array (possibly a
+    tracer -- the adaptive-controller path) switches to the dynamic
+    selection, which then needs the static ceiling ``k_cap``.
     """
     be = get_stc_backend(backend)
-    if be.select_batch is None:
+    a = jnp.abs(carried.astype(jnp.float32))
+    if isinstance(ks, jax.Array):
+        if k_cap is None:
+            raise ValueError(
+                "traced per-row ks (adaptive controller) require a static "
+                "k_cap bound; pass k_cap=int(caps.max())")
+        sel = be.select_batch_dynamic or _jnp_select_batch_dynamic
+        thresh, cnt, sums = sel(carried, ks, int(k_cap))
+    elif be.select_batch is None:
         raise NotImplementedError(
             f"STC backend {be.name!r} does not implement select_batch; "
             "chunked (layer, chunk) selection requires it -- see "
             "StcBackend.select_batch")
-    a = jnp.abs(carried.astype(jnp.float32))
-    thresh, cnt, sums = be.select_batch(carried, ks)
+    else:
+        thresh, cnt, sums = be.select_batch(carried, ks)
     mu = sums / jnp.maximum(cnt, 1).astype(jnp.float32)
     mask = (a >= thresh[:, None]) & (a > 0.0)
     tern = jnp.where(mask, mu[:, None] * jnp.sign(carried.astype(jnp.float32)),
@@ -292,7 +345,7 @@ def stc_compress_blocks(carried: jnp.ndarray, ks, *, backend: str = "jnp"):
 STC_BACKENDS: dict[str, StcBackend] = {
     "jnp": StcBackend("jnp", _jnp_compress_with_residual,
                       _jnp_compress_with_residual_batch,
-                      _jnp_select_batch),
+                      _jnp_select_batch, _jnp_select_batch_dynamic),
 }
 
 

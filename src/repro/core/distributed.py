@@ -226,7 +226,8 @@ def _finish_tree(tree, thresh, cnt_tot, sum_tot, numel):
 
 
 def stc_compress_tree_chunked(tree, p: float, chunk_size: int, *,
-                              p_fn=None, backend: str = "jnp"):
+                              p_fn=None, backend: str = "jnp",
+                              controller=None):
     """Per-``(leaf, chunk)`` STC: independent selection + µ per block.
 
     The chunked twin of :func:`stc_compress_tree`: instead of ONE global
@@ -239,13 +240,22 @@ def stc_compress_tree_chunked(tree, p: float, chunk_size: int, *,
     blocks only, so the sweeps pipeline across the mesh.
 
     ``p_fn(layer_name, depth) -> p | None`` is the per-layer sparsity
-    schedule hook (None keeps ``p``).  Returns ``(ternary_tree, stats)``
+    schedule hook (None keeps ``p``; every schedule-produced p is validated
+    -- finite, in (0, 1] -- with a ValueError naming the layer).
+    ``controller`` (a :mod:`repro.core.adaptive` name or instance) switches
+    per-chunk k from the static schedule to the controller's in-jit policy;
+    the tree path is stateless, so stateful controllers run their
+    instantaneous rule (``state=None``).  Returns ``(ternary_tree, stats)``
     with aggregate nnz/µ across all blocks.
     """
+    from repro.core.adaptive import make_controller, validate_sparsity
     from repro.core.compression import stc_compress_blocks
 
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    ctrl = make_controller(controller) if controller is not None else None
+    if ctrl is not None and not ctrl.adapts:
+        ctrl = None                      # "fixed": exactly the static path
     flat_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out_leaves = []
     nnz_tot = jnp.zeros((), jnp.int32)
@@ -256,9 +266,10 @@ def stc_compress_tree_chunked(tree, p: float, chunk_size: int, *,
         if leaf.size == 0:
             out_leaves.append(leaf)
             continue
-        p_leaf = None if p_fn is None \
-            else p_fn(jax.tree_util.keystr(path), depth)
-        p_leaf = p if p_leaf is None else float(p_leaf)
+        lname = jax.tree_util.keystr(path)
+        p_leaf = None if p_fn is None else p_fn(lname, depth)
+        p_leaf = p if p_leaf is None \
+            else validate_sparsity(p_leaf, lname, depth)
         flat = leaf.astype(jnp.float32).reshape(-1)
         w = min(chunk_size, flat.size)
         n_chunks = -(-flat.size // w)
@@ -267,7 +278,15 @@ def stc_compress_tree_chunked(tree, p: float, chunk_size: int, *,
         valid = np.full(n_chunks, w, np.int64)
         valid[-1] = flat.size - (n_chunks - 1) * w
         ks = np.maximum((valid * p_leaf).astype(np.int64), 1)
-        tern, cnt, mu = stc_compress_blocks(blocks, ks, backend=backend)
+        if ctrl is not None:
+            caps = ctrl.caps(ks, valid)
+            dyn_ks, _ = ctrl.chunk_ks(blocks[None], None, base_ks=ks,
+                                      caps=caps)
+            tern, cnt, mu = stc_compress_blocks(
+                blocks, jnp.asarray(dyn_ks).reshape(n_chunks),
+                backend=backend, k_cap=int(caps.max()))
+        else:
+            tern, cnt, mu = stc_compress_blocks(blocks, ks, backend=backend)
         out_leaves.append(
             tern.reshape(-1)[: flat.size].reshape(leaf.shape)
             .astype(leaf.dtype))

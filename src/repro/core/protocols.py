@@ -300,6 +300,27 @@ class Codec:
         raise NotImplementedError(
             f"{type(self).__name__} has no fused chunk-blocks path")
 
+    # Adaptive-controller variants (repro.core.adaptive): per-chunk k is no
+    # longer static -- the controller observes the error-feedback pre-image
+    # inside the jitted round and its (optional) state threads through the
+    # call.  Only meaningful for ``chunk_blocks = True`` codecs.
+
+    def encode_chunk_blocks_adaptive(self, blocks, states, controller,
+                                     ctrl_state, *, base_ks, caps):
+        """Fused upstream compression with controller-chosen per-chunk k.
+
+        Returns ``(tern, new_states, new_ctrl_state, stats)``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no adaptive chunk-blocks path")
+
+    def aggregate_chunk_blocks_adaptive(self, blocks, server_state,
+                                        controller, ctrl_state, *, base_ks,
+                                        caps, mask=None, staleness=None):
+        """Fused aggregation + downstream compression with controller-chosen
+        per-chunk k.  Returns ``(out, new_state, new_ctrl_state, stats)``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no adaptive chunk-blocks path")
+
     # -- server side (aggregation + downstream) -----------------------------
     def participation_weights(self, mask, staleness=None) -> jnp.ndarray:
         """Per-message combining weights ``w_i = mask_i * (1+s_i)^-decay``.
@@ -840,6 +861,11 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
     # field only drives the tree path.
     chunk_size: Optional[int] = None
     p_fn: Optional[object] = None
+    # adaptive per-chunk sparsity controller (repro.core.adaptive): a
+    # registered name or SparsityController instance.  Like ``p_fn``, this
+    # field only drives the TREE path; the flat trainers thread their
+    # controller through chunk_codec(..., controller=) instead.
+    controller: Optional[object] = None
 
     wire_format: ClassVar[bool] = True      # Golomb position stream (Alg. 3)
     wire_header_bits: ClassVar[float] = 32.0  # fp32 µ per message (Eq. 15)
@@ -974,6 +1000,44 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
                                  mu=jnp.mean(mu))
         return tern, ResidualState(residual=carried - tern), stats
 
+    # ---- adaptive-controller chunked path (repro.core.adaptive) ----
+    def encode_chunk_blocks_adaptive(self, blocks, states, controller,
+                                     ctrl_state, *, base_ks, caps):
+        """Controller-chosen per-(client, chunk) k: the controller observes
+        the carried (update + residual) blocks and picks traced ks, bounded
+        by the static ``caps``, then one dynamic ``select_batch`` sweep
+        compresses every row."""
+        P, C, W = blocks.shape
+        carried = (blocks.astype(jnp.float32)
+                   + states.residual.astype(jnp.float32))
+        ks, new_ctrl = controller.chunk_ks(carried, ctrl_state,
+                                           base_ks=base_ks, caps=caps)
+        tern, cnt, mu = stc_compress_blocks(
+            carried.reshape(P * C, W), jnp.asarray(ks).reshape(P * C),
+            backend=self.backend, k_cap=int(np.asarray(caps).max()))
+        tern = tern.reshape(P, C, W)
+        stats = CompressionStats(nnz=cnt.reshape(P, C).sum(axis=1),
+                                 numel=jnp.full(P, C * W),
+                                 mu=mu.reshape(P, C).mean(axis=1))
+        return (tern, ResidualState(residual=carried - tern), new_ctrl,
+                stats)
+
+    def aggregate_chunk_blocks_adaptive(self, blocks, server_state,
+                                        controller, ctrl_state, *, base_ks,
+                                        caps, mask=None, staleness=None):
+        mean = self.combine(blocks, mask, staleness)        # (C, W)
+        carried = mean + server_state.residual.astype(jnp.float32)
+        ks, new_ctrl = controller.chunk_ks(carried[None], ctrl_state,
+                                           base_ks=base_ks, caps=caps)
+        tern, cnt, mu = stc_compress_blocks(
+            carried, jnp.asarray(ks).reshape(carried.shape[0]),
+            backend=self.backend, k_cap=int(np.asarray(caps).max()))
+        stats = CompressionStats(nnz=jnp.sum(cnt),
+                                 numel=jnp.asarray(carried.size),
+                                 mu=jnp.mean(mu))
+        return (tern, ResidualState(residual=carried - tern), new_ctrl,
+                stats)
+
     def upload_bits(self, numel: int) -> float:
         return golomb.stc_message_bits(numel, self.sparsity_up)
 
@@ -988,7 +1052,7 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
         if self.chunk_size:
             tern, st = stc_compress_tree_chunked(
                 carried, self.sparsity_up, self.chunk_size, p_fn=self.p_fn,
-                backend=self.backend)
+                backend=self.backend, controller=self.controller)
         else:
             tern, st = stc_compress_tree(carried, self.sparsity_up,
                                          numel=numel, iters=iters)
@@ -1002,7 +1066,7 @@ class StcCodec(_ErrorFeedbackMixin, Codec):
         if self.chunk_size:
             down, st = stc_compress_tree_chunked(
                 carried, self.sparsity_down, self.chunk_size, p_fn=self.p_fn,
-                backend=self.backend)
+                backend=self.backend, controller=self.controller)
         else:
             down, st = stc_compress_tree(carried, self.sparsity_down,
                                          numel=numel, iters=iters)

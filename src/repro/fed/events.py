@@ -198,6 +198,7 @@ class EventLoop:
         self.faults = faults
         self.validator = validator
         self.version = 0                                # aggregations so far
+        self.last_agg_t = 0.0                           # last take_round time
         self.buffer: List[EventRecord] = []
         self._inflight_n = np.zeros(n_clients, np.int32)
         self.n_inflight = 0
@@ -356,6 +357,7 @@ class EventLoop:
         kept = sorted(self.buffer, key=lambda r: r.dseq)
         self.buffer = []
         self.version += 1
+        self.last_agg_t = self.clock.now
         return kept
 
     def stats(self) -> dict:
@@ -382,7 +384,11 @@ class EventLoop:
             "injected": self.n_injected,
             "pending": self.n_inflight,
             "sim_time": now,
-            "aggs_per_time": _rate(self.version, now),
+            # rate against the LAST aggregation's timestamp, not the full
+            # clock: post-final-aggregation quiescent drain (advance_to)
+            # advances the clock without aggregating and must not deflate
+            # the rate
+            "aggs_per_time": _rate(self.version, self.last_agg_t),
             "drop_rate": _rate(self.n_dropped + self.n_lost, served),
             "duplicate_rate": _rate(self.n_duplicates, served),
             "quarantine_rate": _rate(self.n_quarantined, served),
@@ -425,6 +431,7 @@ def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
                      validator=None if fm is None else _placeholder_validator)
     rng = np.random.default_rng(seed + 7)               # sampler draws
     last_seen = np.zeros(n_clients, np.int64)
+    seen = np.zeros(n_clients, bool)
     for _ in range(aggregations):
         cohorts = 0
         while not loop.ready():
@@ -434,8 +441,11 @@ def simulate_scenario(scenario: Union[str, Scenario], *, n_clients: int = 256,
                         f"scenario {scen.name!r} starved the buffer: "
                         f"{cohorts} cohorts dispatched without reaching "
                         f"k_arrivals={k}")
-                view = SamplerView(loop.version, last_seen, loop.inflight)
-                loop.dispatch(smp.select(rng, view, cohort))
+                view = SamplerView(loop.version, last_seen, loop.inflight,
+                                   seen)
+                ids = np.asarray(smp.select(rng, view, cohort), np.int64)
+                seen[ids] = True
+                loop.dispatch(ids)
                 cohorts += 1
             else:
                 loop.step()
@@ -515,8 +525,10 @@ class EventDrivenTrainer(FederatedTrainer):
         model (one jitted phase), then into the event queue."""
         proto = self.protocol
         p = self.env.participants_per_round
-        view = SamplerView(self.round, self.last_seen, self.loop.inflight)
+        view = SamplerView(self.round, self.last_seen, self.loop.inflight,
+                           self.seen_mask)
         sel = np.asarray(self.sampler.select(self.rng, view, p), np.int64)
+        self.seen_mask[sel] = True
         xs, ys = self._sample_batches(sel, proto.local_iters)
         msgs = self._dispatch(sel, xs, ys)
         if self._wire_payloads:
@@ -718,11 +730,13 @@ class EventDrivenTrainer(FederatedTrainer):
     def _history_extra(self) -> dict:
         now = self.loop.clock.now
         last = self.agg_log[-1] if self.agg_log else {}
+        last_agg = self.loop.last_agg_t      # drain must not deflate the rate
         return {"n_dropped": self.n_dropped, "n_lost": self.n_lost,
                 "n_quarantined": self.loop.n_quarantined,
                 "n_duplicates": self.loop.n_duplicates,
                 "sim_time": now,
-                "aggs_per_time": self.round / now if now > 0 else 0.0,
+                "aggs_per_time": (self.round / last_agg
+                                  if last_agg > 0 else 0.0),
                 "pending": self.loop.n_inflight,
                 "aggregated": last.get("aggregated", 0)}
 
@@ -743,6 +757,7 @@ class EventDrivenTrainer(FederatedTrainer):
                 "now": loop.clock.now,
                 "rng": loop.rng.bit_generator.state,
                 "version": loop.version,
+                "last_agg_t": loop.last_agg_t,
                 "buffer": list(loop.buffer),
                 "inflight_n": loop._inflight_n.copy(),
                 "n_inflight": loop.n_inflight,
@@ -781,6 +796,9 @@ class EventDrivenTrainer(FederatedTrainer):
         loop.clock.now = float(ls["now"])
         loop.rng.bit_generator.state = ls["rng"]
         loop.version = int(ls["version"])
+        # pre-fix checkpoints carry no last_agg_t; the clock position is the
+        # closest available stand-in (matches their old full-clock rate)
+        loop.last_agg_t = float(ls.get("last_agg_t", ls["now"]))
         loop.buffer = list(ls["buffer"])
         loop._inflight_n = np.asarray(ls["inflight_n"], np.int32).copy()
         loop.n_inflight = int(ls["n_inflight"])

@@ -89,6 +89,11 @@ class TrainerConfig:
     # ignore it).
     chunks: int | str | None = None
     p_fn: Optional[Callable] = None
+    # Adaptive per-chunk sparsity controller (repro.core.adaptive): a
+    # registered name ("fixed" / "residual_mass" / "snr_constant") or a
+    # SparsityController instance; requires ``chunks``.  "fixed" (or None)
+    # keeps the static schedule byte-identically.
+    controller: object = None
     # Fused decode→aggregate server ingestion (repro.core.ingest): arriving
     # messages scatter straight into ONE O(numel) accumulator (wire codecs
     # through their decoded Golomb/sign-plane fields, others densely) and
@@ -202,7 +207,12 @@ class FederatedTrainer:
         if tcfg.chunks is not None:
             cspec = (whole_vector_spec(self.numel) if tcfg.chunks == "whole"
                      else chunk_spec_from_tree(params, int(tcfg.chunks)))
-            protocol = chunk_codec(protocol, cspec, p_fn=tcfg.p_fn)
+            protocol = chunk_codec(protocol, cspec, p_fn=tcfg.p_fn,
+                                   controller=tcfg.controller)
+        elif tcfg.controller is not None:
+            raise ValueError(
+                "TrainerConfig(controller=...) needs per-chunk states; set "
+                "TrainerConfig(chunks=...) (e.g. chunks='whole')")
         self.protocol = protocol
         self.ingest = bool(tcfg.ingest)
         if self.ingest and not protocol.supports_ingest:
@@ -231,6 +241,7 @@ class FederatedTrainer:
             protocol.init_client_state(self.numel), c)
         self.server_state = protocol.init_server_state(self.numel)
         self.last_seen = np.zeros(c, dtype=np.int64)  # round of last participation
+        self.seen_mask = np.zeros(c, dtype=bool)      # dispatched at least once
         self.cache = UpdateCache(self.numel, max_rounds=64)
 
         self.round = 0
@@ -413,6 +424,7 @@ class FederatedTrainer:
             "client_state": jax.tree.map(np.asarray, self.client_state),
             "server_state": jax.tree.map(np.asarray, self.server_state),
             "last_seen": self.last_seen.copy(),
+            "seen_mask": self.seen_mask.copy(),
             "rng": self.rng.bit_generator.state,
             "cache": {"round": self.cache.round,
                       "updates": list(self.cache._updates)},  # newest first
@@ -431,6 +443,11 @@ class FederatedTrainer:
         self.client_state = jax.tree.map(jnp.asarray, st["client_state"])
         self.server_state = jax.tree.map(jnp.asarray, st["server_state"])
         self.last_seen = np.asarray(st["last_seen"], np.int64).copy()
+        # pre-fix checkpoints have no seen_mask; last_seen > 0 recovers all
+        # but the round-0 cohort (the legacy ambiguity this field removes)
+        self.seen_mask = (np.asarray(st["seen_mask"], bool).copy()
+                          if "seen_mask" in st
+                          else self.last_seen > 0)
         self.rng.bit_generator.state = st["rng"]
         self.cache = UpdateCache(self.numel, max_rounds=self.cache.max_rounds)
         self.cache.round = int(st["cache"]["round"])

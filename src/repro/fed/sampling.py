@@ -36,6 +36,12 @@ class SamplerView(NamedTuple):
     round: int              # current aggregation round
     last_seen: np.ndarray   # (n_clients,) round of last dispatch
     inflight: np.ndarray    # (n_clients,) bool: an update is in the air
+    # (n_clients,) bool: client has been dispatched at least once.  A
+    # zero in ``last_seen`` is ambiguous -- "sampled at round 0" and
+    # "never sampled" collide -- so age-aware samplers need this to give
+    # never-seen clients maximal weight.  None (legacy callers) falls
+    # back to the ambiguous reading.
+    seen: Optional[np.ndarray] = None
 
 
 _REGISTRY: dict[str, type["ClientSampler"]] = {}
@@ -96,6 +102,11 @@ class StalenessAwareSampler(ClientSampler):
     zeroed while an update of theirs is still in flight (no duplicate
     in-flight work) -- unless that would starve the cohort, in which case
     in-flight clients are readmitted at the minimum weight.
+
+    Never-yet-seen clients (``view.seen`` False) get ``age = round + 1`` --
+    strictly older than any client sampled at round 0 -- so no client can
+    starve behind a zero-initialized ``last_seen``: at bias > 0 an unseen
+    client always carries the maximal weight until its first dispatch.
     """
 
     name = "staleness"
@@ -109,6 +120,9 @@ class StalenessAwareSampler(ClientSampler):
     def select(self, rng, view, cohort):
         n = view.last_seen.size
         age = (view.round - view.last_seen).astype(np.float64)
+        if view.seen is not None:
+            age = np.where(np.asarray(view.seen, bool), age,
+                           float(view.round) + 1.0)
         w = (1.0 + np.maximum(age, 0.0)) ** self.bias
         free = ~np.asarray(view.inflight, bool)
         if int(free.sum()) >= cohort:

@@ -115,6 +115,9 @@ class TrainConfig:
                                     # sweeps shard + pipeline across the mesh
     p_fn: Any = None                # per-layer sparsity schedule hook:
                                     # p_fn(layer_name, depth) -> p | None
+    controller: Any = None          # adaptive per-chunk sparsity controller
+                                    # (repro.core.adaptive name or instance)
+                                    # for the chunked tree path
     measure_wire: bool = False      # also return (msgs, global_delta) trees
                                     # so a host WireLedger can account the
                                     # REAL serialized bits per round
@@ -136,7 +139,7 @@ def codec_for(tc: TrainConfig) -> Codec:
     fields = {f.name for f in dataclasses.fields(cls)}
     kw = dict(sparsity_up=tc.sparsity_up, sparsity_down=tc.sparsity_down,
               sign_step=tc.sign_step, local_iters=tc.local_iters,
-              chunk_size=tc.chunks, p_fn=tc.p_fn)
+              chunk_size=tc.chunks, p_fn=tc.p_fn, controller=tc.controller)
     kw = {k: v for k, v in kw.items() if k in fields}
     if tc.rule is not None:
         kw["rule"] = tc.rule

@@ -1,0 +1,331 @@
+"""Adaptive per-chunk sparsity controllers: registry semantics, hyperparam
+validation, the schedule/controller sparsity guards, and THE property test --
+``controller="fixed"`` routes through the byte-identical static path in all
+three trainers while adaptive controllers keep the measured wire bits under
+the deterministic stream bound every round.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (FixedController, ResidualMassController,
+                        SnrConstantController, chunk_codec,
+                        chunk_spec_from_sizes, make_controller, make_protocol,
+                        registered_controllers, validate_sparsity,
+                        whole_vector_spec)
+from repro.data import make_classification
+from repro.fed import (BufferedFederatedTrainer, EventDrivenTrainer,
+                       FederatedTrainer, FedEnvironment, LatencyModel,
+                       TrainerConfig)
+from repro.fed.scenarios import SteadyScenario
+from repro.models.paper_models import MODEL_ZOO
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(seed=0, n=600, n_test=120)
+
+
+def _env():
+    return FedEnvironment(n_clients=6, participation=0.5,
+                          classes_per_client=2, batch_size=10)
+
+
+def _stc():
+    return make_protocol("stc", sparsity_up=1 / 20, sparsity_down=1 / 20)
+
+
+# ---------------------------------------------------------------------------
+# registry + hyperparameter validation
+# ---------------------------------------------------------------------------
+
+
+class TestControllerRegistry:
+    def test_registered_names(self):
+        assert set(registered_controllers()) >= {
+            "fixed", "residual_mass", "snr_constant"}
+
+    def test_unknown_name_raises_keyerror_listing_known(self):
+        with pytest.raises(KeyError, match="fixed"):
+            make_controller("no-such-controller")
+
+    def test_hyphen_and_underscore_are_interchangeable(self):
+        assert isinstance(make_controller("residual-mass"),
+                          ResidualMassController)
+        assert isinstance(make_controller("snr_constant"),
+                          SnrConstantController)
+
+    def test_instance_passes_through_untouched(self):
+        ctrl = ResidualMassController(budget=0.5)
+        assert make_controller(ctrl) is ctrl
+
+    def test_overrides_reach_the_constructor(self):
+        assert make_controller("residual_mass", budget=0.25).budget == 0.25
+        assert make_controller("snr_constant", snr=2.0, ema=0.0).snr == 2.0
+
+    @pytest.mark.parametrize("kwargs", [dict(budget=0.0), dict(budget=-1.0),
+                                        dict(budget=float("nan")),
+                                        dict(budget=float("inf"))])
+    def test_residual_mass_validates_budget(self, kwargs):
+        with pytest.raises(ValueError, match="budget"):
+            ResidualMassController(**kwargs)
+
+    @pytest.mark.parametrize("kwargs", [dict(snr=0.0), dict(snr=-1.0),
+                                        dict(snr=float("nan")),
+                                        dict(ema=1.0), dict(ema=-0.1),
+                                        dict(ema=float("nan"))])
+    def test_snr_constant_validates_hyperparams(self, kwargs):
+        with pytest.raises(ValueError, match="snr|ema"):
+            SnrConstantController(**kwargs)
+
+    @pytest.mark.parametrize("scale", [0.5, 0.0, float("nan"), float("inf")])
+    def test_k_max_scale_validated(self, scale):
+        with pytest.raises(ValueError, match="k_max_scale"):
+            ResidualMassController(k_max_scale=scale)
+
+    def test_caps_geometry(self):
+        base = np.asarray([2, 5, 1])
+        valid = np.asarray([16, 8, 3])
+        ctrl = ResidualMassController(k_max_scale=3.0)
+        # ceil(3 * base) clamped to [base, valid]
+        np.testing.assert_array_equal(ctrl.caps(base, valid), [6, 8, 3])
+        # the fixed marker never exceeds the static schedule
+        np.testing.assert_array_equal(
+            FixedController().caps(base, valid), base)
+        assert not FixedController().adapts
+        assert SnrConstantController().stateful
+
+
+# ---------------------------------------------------------------------------
+# sparsity guards (satellite: adversarial p_fn + controller p validation)
+# ---------------------------------------------------------------------------
+
+
+BAD_PS = [0.0, -0.25, 1.5, float("nan"), float("inf"), "dense", None]
+
+
+class TestSparsityValidation:
+    @pytest.mark.parametrize("p", BAD_PS)
+    def test_validate_sparsity_rejects(self, p):
+        with pytest.raises(ValueError, match="layer 'conv'"):
+            validate_sparsity(p, "conv", 3)
+
+    def test_validate_sparsity_accepts_the_boundary(self):
+        assert validate_sparsity(1.0, "x", 0) == 1.0
+        assert validate_sparsity(1e-6, "x", 0) == 1e-6
+        assert validate_sparsity(np.float32(0.5), "x", 0) == 0.5
+
+    @pytest.mark.parametrize("p", BAD_PS[:-1])  # None = "use default": legal
+    def test_chunk_codec_rejects_adversarial_p_fn_at_wrap_time(self, p):
+        spec = chunk_spec_from_sizes([16, 16], names=["dense", "embed"],
+                                     chunk_size=8)
+        with pytest.raises(ValueError, match="embed"):
+            chunk_codec(_stc(), spec,
+                        p_fn=lambda name, d: p if name == "embed" else None)
+
+    @pytest.mark.parametrize("p", BAD_PS[:-1])
+    def test_tree_path_rejects_adversarial_p_fn(self, p):
+        import jax.numpy as jnp
+
+        from repro.core.distributed import stc_compress_tree_chunked
+        tree = {"w": jnp.ones((8, 4)), "b": jnp.ones(4)}
+        with pytest.raises(ValueError, match="sparsity schedule"):
+            stc_compress_tree_chunked(tree, 1 / 5, chunk_size=16,
+                                      p_fn=lambda name, d: p)
+
+    def test_adaptive_controller_requires_chunk_blocks_codec(self):
+        spec = whole_vector_spec(32)
+        with pytest.raises(TypeError, match="chunk-blocks"):
+            chunk_codec(make_protocol("signsgd"), spec,
+                        controller="residual_mass")
+        # the non-adapting marker stays legal on any codec
+        cc = chunk_codec(make_protocol("signsgd"), spec, controller="fixed")
+        assert cc.controller.name == "fixed"
+
+    def test_trainer_controller_without_chunks_is_loud(self, data):
+        train, test = data
+        with pytest.raises(ValueError, match="chunks"):
+            FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(),
+                             _stc(), TrainerConfig(
+                                 lr=0.05, seed=0, controller="snr_constant"))
+
+
+# ---------------------------------------------------------------------------
+# THE property test (satellite): controller="fixed" + chunks="whole" is the
+# flat trainer BIT FOR BIT -- params, both ledgers, wire_log, history --
+# for stc AND signsgd, in the sync, buffered and event trainers.
+# ---------------------------------------------------------------------------
+
+
+def _flat_and_fixed(data, name, trainer):
+    train, test = data
+    kw = {"stc": dict(sparsity_up=1 / 20, sparsity_down=1 / 20)}
+    rounds = 3
+
+    def build(tcfg):
+        proto = make_protocol(name, **kw.get(name, {}))
+        args = (MODEL_ZOO["logreg"], train, test, _env(), proto, tcfg)
+        if trainer == "sync":
+            return FederatedTrainer(*args)
+        if trainer == "buffered":
+            return BufferedFederatedTrainer(*args, deadline=math.inf)
+        return EventDrivenTrainer(
+            *args, scenario=SteadyScenario(latency=LatencyModel(mean=3.0,
+                                                                sigma=0.0)))
+
+    flat = build(TrainerConfig(lr=0.05, seed=0))
+    flat.run(rounds, eval_every=rounds)
+    fixed = build(TrainerConfig(lr=0.05, seed=0, chunks="whole",
+                                controller="fixed"))
+    fixed.run(rounds, eval_every=rounds)
+    return flat, fixed
+
+
+@pytest.mark.parametrize("trainer", ["sync", "buffered", "event"])
+@pytest.mark.parametrize("name", ["stc", "signsgd"])
+def test_fixed_controller_whole_vector_is_flat_path(data, name, trainer):
+    flat, fixed = _flat_and_fixed(data, name, trainer)
+    np.testing.assert_array_equal(np.asarray(flat.params_vec),
+                                  np.asarray(fixed.params_vec))
+    assert flat.bits_up == fixed.bits_up
+    assert flat.bits_down == fixed.bits_down
+    assert flat.bits_up_analytic == fixed.bits_up_analytic
+    assert flat.bits_down_analytic == fixed.bits_down_analytic
+    assert flat.wire_log == fixed.wire_log
+    for hf, hc in zip(flat.history, fixed.history):
+        for key in hf:
+            assert hf[key] == hc[key], key
+
+
+# ---------------------------------------------------------------------------
+# adaptive controllers end to end: the wire bound stays a true ceiling
+# under time-varying per-chunk k, and the controllers actually adapt
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_trainer(data, controller, chunks=32, rounds=3):
+    train, test = data
+    tr = FederatedTrainer(MODEL_ZOO["logreg"], train, test, _env(), _stc(),
+                          TrainerConfig(lr=0.05, seed=0, chunks=chunks,
+                                        controller=controller))
+    tr.run(rounds, eval_every=rounds)
+    return tr
+
+
+@pytest.mark.parametrize("controller", [
+    ResidualMassController(budget=0.6),
+    SnrConstantController(snr=1.0),
+    "residual-mass", "snr-constant"])
+def test_measured_bits_below_wire_bound_every_round(data, controller):
+    tr = _adaptive_trainer(data, controller)
+    assert len(tr.wire_log) == 3
+    for row in tr.wire_log:
+        assert row["bits_up_bound"] is not None
+        assert row["bits_up"] <= row["bits_up_bound"]
+    assert np.all(np.isfinite(np.asarray(tr.params_vec)))
+    assert tr.history[-1]["acc"] > 0.0
+    assert tr.bits_up > 0 and tr.bits_up_analytic > 0
+
+
+def test_adaptive_controllers_change_the_bit_spend(data):
+    """A sub-unit budget must spend strictly fewer measured upstream bits
+    than the fixed schedule -- proof the per-chunk ks really vary.  Chunks
+    must be large enough that base_k is well above the k >= 1 floor,
+    otherwise the clip hides the budget."""
+    fixed = _adaptive_trainer(data, "fixed", chunks=256)
+    lean = _adaptive_trainer(data, ResidualMassController(budget=0.5),
+                             chunks=256)
+    assert lean.bits_up < fixed.bits_up
+    snr = _adaptive_trainer(data, SnrConstantController(snr=1.0), chunks=256)
+    assert snr.bits_up != fixed.bits_up
+
+
+def test_snr_state_rides_checkpoints_bit_identically(data, tmp_path):
+    """The stateful controller's EMA leaf lives in the codec state pytrees:
+    kill-and-resume through the event trainer's checkpoint must reproduce
+    the uninterrupted run exactly."""
+    train, test = data
+    ck = str(tmp_path / "snr.ck")
+
+    def build():
+        return EventDrivenTrainer(
+            MODEL_ZOO["logreg"], train, test, _env(), _stc(),
+            TrainerConfig(lr=0.05, seed=0, chunks=32,
+                          controller=SnrConstantController(snr=1.0)))
+
+    ref = build()
+    for _ in range(4):
+        ref.run_round()
+
+    a = build()
+    for _ in range(2):
+        a.run_round()
+    a.save_checkpoint(ck)
+
+    b = build()
+    b.restore_checkpoint(ck)
+    for _ in range(2):
+        b.run_round()
+    np.testing.assert_array_equal(np.asarray(ref.params_vec),
+                                  np.asarray(b.params_vec))
+    assert ref.wire_log == b.wire_log
+    assert (ref.bits_up, ref.bits_down) == (b.bits_up, b.bits_down)
+
+
+# ---------------------------------------------------------------------------
+# the dynamic selection primitive + the tree path
+# ---------------------------------------------------------------------------
+
+
+class TestDynamicSelection:
+    def test_matches_static_select_at_constant_k(self):
+        import jax.numpy as jnp
+
+        from repro.core.compression import (get_stc_backend,
+                                            select_batch_dynamic)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(6, 40)).astype(np.float32))
+        static = get_stc_backend("jnp").select_batch(x, 5)
+        dynamic = select_batch_dynamic(x, jnp.full((6,), 5, jnp.int32),
+                                       k_cap=8)
+        for s, d in zip(static, dynamic):   # (threshold, count, sum) triple
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(d))
+
+    def test_per_row_k_selects_exactly_k(self):
+        import jax.numpy as jnp
+
+        from repro.core.compression import select_batch_dynamic
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+        ks = jnp.asarray([1, 3, 7, 2], jnp.int32)
+        _, cnt, _ = select_batch_dynamic(x, ks, k_cap=8)
+        np.testing.assert_array_equal(np.asarray(cnt), [1, 3, 7, 2])
+
+    def test_tree_path_fixed_is_static_and_adaptive_jits(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.distributed import stc_compress_tree_chunked
+        rng = np.random.default_rng(2)
+        tree = {"w": jnp.asarray(rng.normal(size=(16, 8)),
+                                 dtype=jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(8,)), dtype=jnp.float32)}
+        t_static, _ = stc_compress_tree_chunked(tree, 1 / 5, chunk_size=16)
+        t_fixed, _ = stc_compress_tree_chunked(tree, 1 / 5, chunk_size=16,
+                                               controller="fixed")
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(t_static[k]),
+                                          np.asarray(t_fixed[k]))
+
+        @jax.jit
+        def go(t):
+            tern, _ = stc_compress_tree_chunked(
+                t, 1 / 5, chunk_size=16,
+                controller=ResidualMassController(budget=0.8))
+            return tern
+        tern = go(tree)
+        for k in tree:
+            nz = int((np.asarray(tern[k]) != 0).sum())
+            assert 0 < nz < tree[k].size

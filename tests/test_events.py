@@ -109,6 +109,29 @@ class TestEventLoopDeterminism:
         assert [r.dseq for r in kept] == list(range(8))
         assert loop.version == 1 and loop.buffer == []
 
+    def test_drain_after_final_agg_does_not_deflate_rate(self):
+        """Regression: ``stats()["aggs_per_time"]`` divides by the LAST
+        aggregation's timestamp, not the drained clock -- serving post-final
+        arrivals (or idling) must leave the throughput figure untouched."""
+        scen = SteadyScenario(latency=LatencyModel(mean=1.0, sigma=0.5))
+        loop = EventLoop(scen, 16, cohort=4, k_arrivals=4, concurrency=8,
+                         max_staleness=1, seed=0)
+        loop.dispatch(np.arange(4))
+        while not loop.ready():
+            loop.step()
+        loop.take_round()
+        t_agg = loop.last_agg_t
+        assert t_agg == loop.clock.now > 0.0
+        rate = loop.stats()["aggs_per_time"]
+        assert rate == pytest.approx(1.0 / t_agg)
+        # drain: three more arrivals land (sub-K: no aggregation) and the
+        # clock moves past the final aggregation
+        loop.dispatch(np.arange(4, 8))
+        for _ in range(3):
+            loop.step()
+        assert loop.clock.now > t_agg and loop.version == 1
+        assert loop.stats()["aggs_per_time"] == pytest.approx(rate)
+
     def test_loop_validates_configuration(self):
         scen = SteadyScenario()
         with pytest.raises(ValueError, match="k_arrivals"):
@@ -444,6 +467,40 @@ class TestSamplers:
         got = make_sampler("staleness").select(
             np.random.default_rng(1), view, 3)
         assert len(set(got.tolist())) == 3
+
+    def test_staleness_sampler_never_starves_unseen_clients(self):
+        """Regression: a zero-initialized ``last_seen`` made never-seen
+        clients tie with clients genuinely sampled at round 0.  With the
+        ``seen`` mask they carry age ``round + 1`` -- strictly the oldest --
+        so at bias > 0 an unseen client outweighs a round-0 participant."""
+        n = 10
+        last_seen = np.zeros(n, np.int64)        # all zeros: ambiguous
+        seen = np.ones(n, bool)
+        seen[-1] = False                          # client 9 never dispatched
+        view = SamplerView(0, last_seen, np.zeros(n, bool), seen)
+        smp = make_sampler("staleness", bias=6.0)
+        rng = np.random.default_rng(3)
+        picks = np.concatenate([smp.select(rng, view, 1)
+                                for _ in range(200)])
+        # age 1 vs age 0 at bias 6 => 2^6 : 1 odds per draw
+        assert (picks == n - 1).mean() > 0.5
+        # legacy callers without the mask keep the old (ambiguous) reading
+        legacy = SamplerView(0, last_seen, np.zeros(n, bool))
+        picks = np.concatenate([smp.select(rng, legacy, 1)
+                                for _ in range(50)])
+        assert len(set(picks.tolist())) > 1
+
+    def test_event_trainer_marks_seen_and_reaches_every_client(self, data):
+        """End to end: the trainer feeds its seen mask to the sampler, so at
+        a strong staleness bias every client is dispatched early on instead
+        of starving behind round-0 ties."""
+        train, test = data
+        tr = EventDrivenTrainer(MODEL_ZOO["logreg"], train, test,
+                                _env(n_clients=8, participation=0.25),
+                                _stc(), TrainerConfig(lr=0.05, seed=0),
+                                sampler=make_sampler("staleness", bias=8.0))
+        tr.run(5, eval_every=5)
+        assert tr.seen_mask.all()
 
     def test_event_trainer_runs_with_staleness_sampler(self, data):
         train, test = data
